@@ -1,0 +1,51 @@
+"""Shared benchmark plumbing: CSV emission, timing, result collection."""
+
+from __future__ import annotations
+
+import csv
+import io
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def ensure_results_dir() -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return RESULTS_DIR
+
+
+def emit_csv(name: str, rows: list[dict], keys: list[str] | None = None) -> str:
+    """Print rows as CSV to stdout and persist to benchmarks/results/<name>.csv."""
+    if not rows:
+        print(f"# {name}: no rows")
+        return ""
+    keys = keys or list(rows[0].keys())
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=keys, extrasaction="ignore")
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+    text = buf.getvalue()
+    print(f"### {name}")
+    print(text)
+    ensure_results_dir()
+    with open(os.path.join(RESULTS_DIR, f"{name}.csv"), "w") as f:
+        f.write(text)
+    return text
+
+
+def save_json(name: str, obj) -> None:
+    ensure_results_dir()
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,73 @@
+"""Paper fig. 6(f)-(h): 3-way replication (RF=3, N = 3*N_e).
+
+Compares HPA (no replication), Random-3W, SDA and PRA-3W while sweeping the
+number of queries, the query size (ADI) and the item-graph density.
+(LMBR is excluded here, as in the paper: it cannot honor an exact-RF
+constraint and its runtime is high.)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    ALGORITHMS, THREE_WAY_ALGORITHMS, Simulator, min_partitions,
+    random_workload,
+)
+
+from .common import Timer, emit_csv
+
+ALGOS = ["hpa", "random3", "sda", "pra3"]
+
+
+def _run_cell(make_wl, runs):
+    rows = []
+    for name in ALGOS:
+        spans = []
+        for r in range(runs):
+            wl = make_wl(seed=r)
+            hg = wl.hypergraph
+            ne = min_partitions(hg, 50)
+            n = 3 * ne
+            sim = Simulator(num_partitions=n, capacity=50)
+            fn = ALGORITHMS[name] if name == "hpa" else THREE_WAY_ALGORITHMS[name]
+            res = sim.run(hg, fn, name=name, seed=r)
+            spans.append(res.avg_span)
+        rows.append(dict(algorithm=name, avg_span=round(float(np.mean(spans)), 4)))
+    return rows
+
+
+def run(quick: bool = True) -> list[dict]:
+    runs = 1 if quick else 3
+    out = []
+
+    nqs = [1000, 4000, 8000, 11000] if quick else [1000, 3000, 5000, 7000, 9000, 11000]
+    for nq in nqs:
+        for row in _run_cell(
+            lambda seed, nq=nq: random_workload(1000, nq, 3, 11, 20, seed=seed),
+            runs,
+        ):
+            out.append(dict(sweep="num_queries", x=nq, **row))
+
+    qsizes = [2, 4, 6, 8, 10] if quick else [2, 3, 4, 5, 6, 7, 8, 9, 10]
+    for q in qsizes:
+        for row in _run_cell(
+            lambda seed, q=q: random_workload(1000, 4000, q, q, 20, seed=seed),
+            runs,
+        ):
+            out.append(dict(sweep="query_size", x=q, **row))
+
+    densities = [2, 5, 10, 20] if quick else [2, 4, 6, 8, 10, 14, 20]
+    for d in densities:
+        for row in _run_cell(
+            lambda seed, d=d: random_workload(1000, 4000, 3, 11, d, seed=seed),
+            runs,
+        ):
+            out.append(dict(sweep="density", x=d, **row))
+
+    emit_csv("fig6_3way", out, ["sweep", "x", "algorithm", "avg_span"])
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,86 @@
+"""Paper fig. 6(a)-(e): Random dataset, homogeneous items.
+
+Sweeps: number of partitions, query size (ADI), number of queries, data-item
+graph density — average query span + placement time for the six algorithms.
+
+Paper defaults: |D|=1000, minQ=3, maxQ=11, NQ=4000, C=50, NPar=40, density=20.
+The paper averages 10 random runs; `runs` trades fidelity for wall-time
+(--full uses 3, quick uses 1 — orderings are stable across seeds).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ALGORITHMS, Simulator, random_workload
+
+from .common import Timer, emit_csv
+
+ALGOS = ["random", "hpa", "ihpa", "pra", "ds", "lmbr"]
+
+
+def _avg_over_runs(make_wl, num_partitions, capacity, runs, algos=ALGOS):
+    rows = []
+    for name in algos:
+        spans, times = [], []
+        for r in range(runs):
+            wl = make_wl(seed=r)
+            sim = Simulator(num_partitions=num_partitions, capacity=capacity)
+            with Timer() as t:
+                res = sim.run(wl.hypergraph, ALGORITHMS[name], name=name, seed=r)
+            spans.append(res.avg_span)
+            times.append(t.seconds)
+        rows.append(
+            dict(algorithm=name, avg_span=round(float(np.mean(spans)), 4),
+                 place_seconds=round(float(np.mean(times)), 3))
+        )
+    return rows
+
+
+def run(quick: bool = True) -> list[dict]:
+    runs = 1 if quick else 3
+    out = []
+
+    # --- (a)+(b): increasing number of partitions (N_e = 20)
+    npars = [20, 30, 40, 45] if quick else [20, 25, 30, 35, 40, 45]
+    for npar in npars:
+        for row in _avg_over_runs(
+            lambda seed: random_workload(1000, 4000, 3, 11, 20, seed=seed),
+            npar, 50, runs,
+        ):
+            out.append(dict(sweep="num_partitions", x=npar, **row))
+
+    # --- (c): increasing query size (minQ = maxQ = x)
+    qsizes = [2, 4, 6, 8, 10] if quick else [2, 3, 4, 5, 6, 7, 8, 9, 10]
+    for q in qsizes:
+        for row in _avg_over_runs(
+            lambda seed, q=q: random_workload(1000, 4000, q, q, 20, seed=seed),
+            40, 50, runs,
+        ):
+            out.append(dict(sweep="query_size", x=q, **row))
+
+    # --- (d): increasing number of queries
+    nqs = [1000, 4000, 8000, 11000] if quick else [1000, 3000, 5000, 7000, 9000, 11000]
+    for nq in nqs:
+        for row in _avg_over_runs(
+            lambda seed, nq=nq: random_workload(1000, nq, 3, 11, 20, seed=seed),
+            40, 50, runs,
+        ):
+            out.append(dict(sweep="num_queries", x=nq, **row))
+
+    # --- (e): increasing data-item-graph density
+    densities = [2, 5, 10, 20] if quick else [2, 4, 6, 8, 10, 14, 20]
+    for d in densities:
+        for row in _avg_over_runs(
+            lambda seed, d=d: random_workload(1000, 4000, 3, 11, d, seed=seed),
+            40, 50, runs,
+        ):
+            out.append(dict(sweep="density", x=d, **row))
+
+    emit_csv("fig6_random", out,
+             ["sweep", "x", "algorithm", "avg_span", "place_seconds"])
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,47 @@
+"""Paper fig. 7: Snowflake dataset (homogeneous items).
+
+Tree-shaped data-item graph (levels=3, degree=5, 15 attrs/table, 2000 items,
+N_e = 20); average span + placement time as partitions grow 20 -> 45.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ALGORITHMS, Simulator, snowflake_workload
+
+from .common import Timer, emit_csv
+
+ALGOS = ["random", "hpa", "ihpa", "pra", "ds", "lmbr"]
+
+
+def run(quick: bool = True) -> list[dict]:
+    runs = 1 if quick else 3
+    npars = [20, 30, 40, 45] if quick else [20, 25, 30, 35, 40, 45]
+    out = []
+    for npar in npars:
+        for name in ALGOS:
+            spans, times = [], []
+            for r in range(runs):
+                wl = snowflake_workload(
+                    levels=3, degree=5, attrs_per_table=15,
+                    num_items=2000, num_queries=4000, seed=r,
+                )
+                sim = Simulator(num_partitions=npar, capacity=100)
+                with Timer() as t:
+                    res = sim.run(wl.hypergraph, ALGORITHMS[name], name=name,
+                                  seed=r)
+                spans.append(res.avg_span)
+                times.append(t.seconds)
+            out.append(dict(
+                num_partitions=npar, algorithm=name,
+                avg_span=round(float(np.mean(spans)), 4),
+                place_seconds=round(float(np.mean(times)), 3),
+            ))
+    emit_csv("fig7_snowflake", out,
+             ["num_partitions", "algorithm", "avg_span", "place_seconds"])
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,98 @@
+"""Kernel microbench: Pallas kernels (interpret mode, correctness-scale) vs
+jnp oracles, plus the analytic FLOPs / arithmetic-intensity table that feeds
+the TPU roofline (wall-clock on this CPU container is NOT a TPU signal; the
+interpret run only proves the kernels execute the same math)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attention.kernel import decode_attention as dec_k
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention as fa_k
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan as ssd_k
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+from .common import emit_csv
+
+
+def _attn_flops(b, h, s, t, d):
+    return 4.0 * b * h * s * t * d  # qk + pv
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention: correctness + roofline terms at deployment scale
+    b, h, kh, s, d = 1, 4, 2, 256, 64
+    q = jax.random.normal(key, (b, h, s, d), jnp.float32)
+    k = jax.random.normal(key, (b, kh, s, d), jnp.float32)
+    v = jax.random.normal(key, (b, kh, s, d), jnp.float32)
+    t0 = time.perf_counter()
+    out = fa_k(q, k, v, causal=True, block_q=64, block_kv=64, interpret=True)
+    t_int = time.perf_counter() - t0
+    ref = flash_attention_ref(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    # deployment shape: prefill_32k per device (batch 2, 2 heads after TP)
+    dep_flops = _attn_flops(2, 2, 32768, 32768, 128) / 2  # causal half
+    dep_bytes = 2 * 2 * 32768 * 128 * 2 * 3  # q,k,v bf16 streamed
+    rows.append(dict(
+        kernel="flash_attention", max_err=f"{err:.2e}",
+        interpret_s=round(t_int, 2),
+        deploy_flops=f"{dep_flops:.2e}", deploy_ai=round(dep_flops / dep_bytes, 1),
+        mxu_bound=dep_flops / dep_bytes > 240,
+    ))
+
+    # decode attention
+    t = 512
+    q1 = jax.random.normal(key, (2, 4, 64), jnp.float32)
+    k1 = jax.random.normal(key, (2, 2, t, 64), jnp.float32)
+    v1 = jax.random.normal(key, (2, 2, t, 64), jnp.float32)
+    kv_pos = jnp.broadcast_to(jnp.arange(t)[None], (2, t)).astype(jnp.int32)
+    q_pos = jnp.full((2,), t - 1, jnp.int32)
+    t0 = time.perf_counter()
+    out = dec_k(q1, k1, v1, kv_pos, q_pos, block_kv=128, interpret=True)
+    t_int = time.perf_counter() - t0
+    err = float(jnp.max(jnp.abs(out - decode_attention_ref(q1, k1, v1, kv_pos,
+                                                           q_pos))))
+    dep_flops = _attn_flops(8, 2, 1, 32768, 128)
+    dep_bytes = 8 * 2 * 32768 * 128 * 2 * 2  # stream k,v bf16
+    rows.append(dict(
+        kernel="decode_attention", max_err=f"{err:.2e}",
+        interpret_s=round(t_int, 2),
+        deploy_flops=f"{dep_flops:.2e}", deploy_ai=round(dep_flops / dep_bytes, 2),
+        mxu_bound=False,  # decode is HBM-bound by construction
+    ))
+
+    # ssd scan
+    bs, ss, hh, p, n = 1, 128, 2, 16, 16
+    x = jax.random.normal(key, (bs, ss, hh, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(key, (bs, ss, hh)))
+    a = -jnp.exp(jax.random.normal(key, (hh,)) * 0.3)
+    bm = jax.random.normal(key, (bs, ss, n)) * 0.3
+    cm = jax.random.normal(key, (bs, ss, n)) * 0.3
+    t0 = time.perf_counter()
+    out = ssd_k(x, dt, a, bm, cm, chunk=32, interpret=True)
+    t_int = time.perf_counter() - t0
+    err = float(jnp.max(jnp.abs(out - ssd_scan_ref(x, dt, a, bm, cm))))
+    L = 256
+    dep_flops = 2.0 * (L * L * 128 + 2 * L * 128 * 64 * 80)  # per chunk/head grp
+    rows.append(dict(
+        kernel="ssd_scan", max_err=f"{err:.2e}", interpret_s=round(t_int, 2),
+        deploy_flops=f"{dep_flops:.2e}", deploy_ai="chunked-matmul",
+        mxu_bound=True,
+    ))
+    emit_csv("kernel_bench", rows)
+    worst = max(float(r["max_err"]) for r in rows)
+    assert worst < 5e-3, f"kernel/oracle divergence {worst}"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Benchmark driver — one module per paper figure/table plus the framework
+applications.  Default is quick mode (single seed, reduced sweep points;
+orderings are stable); pass --full for the paper-fidelity sweeps.
+
+  python -m benchmarks.run [--full] [--only fig6_random,fig9_ispd,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+# (module, headline) in run order
+SECTIONS = [
+    ("energy_model", "fig1/5: span vs latency vs energy (calibrated model)"),
+    ("fig6_random", "fig6a-e: Random dataset, 6 algorithms"),
+    ("fig6_3way", "fig6f-h: 3-way replication"),
+    ("fig7_snowflake", "fig7: Snowflake dataset"),
+    ("fig8_tpch", "fig8: TPC-H heterogeneous item sizes"),
+    ("fig9_ispd", "fig9: ISPD98-like circuit hypergraphs"),
+    ("placement_applications", "framework: MoE experts / shards / checkpoints"),
+    ("kernel_bench", "Pallas kernels vs jnp oracles (CPU interpret)"),
+    ("roofline_table", "roofline terms from dry-run artifacts"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-fidelity sweeps")
+    ap.add_argument("--only", type=str, default="",
+                    help="comma-separated module names to run")
+    args = ap.parse_args()
+    only = set(filter(None, args.only.split(",")))
+
+    t_start = time.time()
+    summary: list[tuple[str, float, str]] = []
+    for mod_name, headline in SECTIONS:
+        if only and mod_name not in only:
+            continue
+        print(f"\n===== {mod_name}: {headline} =====", flush=True)
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+        except ImportError as exc:
+            print(f"  [skipped: {exc}]")
+            summary.append((mod_name, 0.0, "skipped"))
+            continue
+        t0 = time.time()
+        try:
+            mod.run(quick=not args.full)
+            status = "ok"
+        except Exception as exc:  # keep the suite going; report at the end
+            print(f"  [FAILED: {type(exc).__name__}: {exc}]")
+            status = f"FAILED:{type(exc).__name__}"
+        summary.append((mod_name, time.time() - t0, status))
+
+    print("\n===== summary =====")
+    print("name,us_per_call,derived")
+    for name, secs, status in summary:
+        print(f"{name},{secs*1e6:.0f},{status}")
+    print(f"# total: {time.time()-t_start:.1f}s")
+    if any(s.startswith("FAILED") for _, _, s in summary):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""The paper's technique applied to MoE serving: mine a routing trace, fit
+expert placement with LMBR, and run the actual MoE model with the placed
+dispatch tables, comparing all-to-all fan-out (span) against standard
+contiguous expert parallelism.
+
+    PYTHONPATH=src python examples/moe_expert_placement.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.core import (
+    baseline_contiguous_placement, plan_expert_placement,
+    synthetic_routing_trace,
+)
+from repro.models import dispatch_from_plan, forward, init_params
+
+
+def main():
+    cfg = reduce_config(get_config("qwen3-moe-30b-a3b"), dtype="float32")
+    e, ranks, slots = cfg.moe.num_experts, 4, cfg.moe.num_experts // 4 + 2
+
+    # 1. routing trace (in production: mined from the serving fleet)
+    trace = synthetic_routing_trace(e, 500, top_k=cfg.moe.top_k, seed=0)
+
+    # 2. the paper's placement vs standard contiguous EP
+    base = baseline_contiguous_placement(e, ranks, slots_per_rank=slots)
+    plan = plan_expert_placement(trace, e, ranks, slots, algorithm="lmbr")
+    print(f"experts={e} ranks={ranks} slots/rank={slots} "
+          f"(replication budget: {ranks*slots - e} slots)")
+    print(f"avg a2a fan-out (span): contiguous={base.avg_span(trace):.2f} "
+          f"-> placed={plan.avg_span(trace):.2f}")
+    a0 = base.a2a_bytes(trace, 2048, 2 * cfg.d_model)
+    a1 = plan.a2a_bytes(trace, 2048, 2 * cfg.d_model)
+    print(f"estimated a2a payload: {a0/1e9:.2f}GB -> {a1/1e9:.2f}GB "
+          f"({100*(1-a1/a0):.0f}% less)")
+    counts = plan.replica_counts()
+    print(f"replicated experts: {(counts > 1).sum()} "
+          f"(max copies {counts.max()})")
+
+    # 3. run the real model with the placed dispatch — same function value
+    disp = dispatch_from_plan(plan)
+    params = init_params(cfg, jax.random.PRNGKey(0), moe_dispatch=disp)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                                cfg.vocab_size)
+    logits, _, aux, _ = forward(cfg, params, tokens, moe_dispatch=disp,
+                                chunk=32)
+    assert bool(jnp.isfinite(logits).all())
+    print(f"model forward with placed experts OK; "
+          f"token drop fraction {float(aux.get('drop_frac', 0) or 0):.3f}")
+
+
+if __name__ == "__main__":
+    main()

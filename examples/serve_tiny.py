@@ -1,0 +1,22 @@
+"""Serving example: batched prefill + decode of a reduced MoE model, with the
+online expert-placement refit loop.
+
+    PYTHONPATH=src python examples/serve_tiny.py
+"""
+
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    sys.argv = [
+        "serve", "--arch", "qwen3-moe-30b-a3b", "--reduced",
+        "--requests", "8", "--prefill-len", "32", "--decode-len", "16",
+        "--batch", "4",
+    ]
+    return serve_main()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

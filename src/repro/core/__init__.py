@@ -1,0 +1,68 @@
+"""repro.core — the paper's contribution: workload-driven data placement and
+replica selection minimizing average query span (Kumar, Deshpande, Khuller).
+
+Layout:
+  hypergraph  — workload model (queries = hyperedges over data items)
+  setcover    — greedy replica selection / span computation
+  hpa         — multilevel hypergraph partitioner (hMETIS stand-in)
+  algorithms  — IHPA / DS / PRA / LMBR (+ Random, HPA baselines)
+  three_way   — fixed RF=3 variants (PRA-3W, SDA, IHPA-3W)
+  simulator   — trace-driven simulator + energy model
+  workloads   — Random / Snowflake / ISPD-like / TPC-H-hetero generators
+  placement_service — production fit/refit API with hierarchical (pod/host) span
+  expert_placement  — MoE expert->EP-rank placement from routing traces
+  shard_placement   — dataset shard->host placement for the input pipeline
+"""
+
+from .hypergraph import Hypergraph, MutableHypergraph  # noqa: F401
+from .setcover import (  # noqa: F401
+    Placement,
+    cover_for_query,
+    greedy_set_cover,
+    query_span,
+    spans_for_workload,
+)
+from .hpa import partition as hpa_partition  # noqa: F401
+from .algorithms import (  # noqa: F401
+    ALGORITHMS,
+    ds,
+    hpa_placement,
+    ihpa,
+    lmbr,
+    min_partitions,
+    pra,
+    random_placement,
+)
+from .three_way import (  # noqa: F401
+    THREE_WAY_ALGORITHMS,
+    ihpa_3way,
+    pra_3way,
+    random_3way,
+    sda,
+)
+from .simulator import EnergyModel, SimulationResult, Simulator  # noqa: F401
+from .workloads import (  # noqa: F401
+    PAPER_DEFAULTS,
+    Workload,
+    ispd_like_workload,
+    random_workload,
+    snowflake_workload,
+    tpch_heterogeneous,
+)
+from .placement_service import (  # noqa: F401
+    HierarchicalPlan,
+    PlacementPlan,
+    PlacementService,
+)
+from .expert_placement import (  # noqa: F401
+    ExpertPlacementPlan,
+    baseline_contiguous_placement,
+    plan_expert_placement,
+    routing_trace_to_hypergraph,
+    synthetic_routing_trace,
+)
+from .shard_placement import (  # noqa: F401
+    ShardPlacementPlan,
+    mixture_batch_recipes,
+    plan_shard_placement,
+)

@@ -1,0 +1,451 @@
+"""Data placement algorithms with replication (paper §4).
+
+Implemented faithfully from the paper's pseudocode:
+
+  * random_placement — Random baseline (replicate & distribute randomly)
+  * hpa_placement    — HPA baseline, no replication (straight line in fig. 6)
+  * ihpa             — Algorithm 1, Iterative HPA
+  * ds               — Algorithm 2, Dense-Subgraph based
+  * pra              — Algorithm 3, Pre-Replication via hitting sets
+  * lmbr             — Algorithms 4+5, improved Local-Move-Based Replication
+
+All return a `Placement` (membership matrix), on which spans are computed by
+greedy set cover (replica selection).
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Callable
+
+import numpy as np
+
+from . import hpa as hpa_mod
+from .hypergraph import Hypergraph
+from .setcover import Placement, cover_for_query, greedy_set_cover
+
+__all__ = [
+    "random_placement", "hpa_placement", "ihpa", "ds", "pra", "lmbr",
+    "min_partitions", "ALGORITHMS",
+]
+
+
+def min_partitions(hg: Hypergraph, capacity: float) -> int:
+    """N_e = ceil(total item weight / C)."""
+    return int(np.ceil(hg.total_node_weight() / capacity - 1e-9))
+
+
+def _assign_to_placement(
+    hg: Hypergraph, assign: np.ndarray, num_partitions: int, capacity: float
+) -> Placement:
+    pl = Placement.empty(num_partitions, hg.num_nodes, capacity, hg.node_weights)
+    for v in range(hg.num_nodes):
+        pl.member[assign[v], v] = True
+    return pl
+
+
+# ------------------------------------------------------------------ baselines
+def random_placement(
+    hg: Hypergraph, n: int, capacity: float, seed: int = 0, **_
+) -> Placement:
+    """Place every item once at random, then fill all remaining space with
+    random replicas (the paper's Random baseline uses all available space)."""
+    rng = np.random.default_rng(seed)
+    pl = Placement.empty(n, hg.num_nodes, capacity, hg.node_weights)
+    loads = np.zeros(n, dtype=np.float64)
+    for v in rng.permutation(hg.num_nodes):
+        wv = hg.node_weights[v]
+        ok = np.flatnonzero(loads + wv <= capacity)
+        if len(ok) == 0:
+            raise ValueError("random placement cannot fit items")
+        p = int(rng.choice(ok))
+        pl.member[p, v] = True
+        loads[p] += wv
+    # replicate randomly into leftover space
+    order = rng.permutation(hg.num_nodes)
+    for p in range(n):
+        for v in order:
+            if loads[p] + hg.node_weights[v] > capacity:
+                continue
+            if pl.member[p, v]:
+                continue
+            pl.member[p, v] = True
+            loads[p] += hg.node_weights[v]
+    return pl
+
+
+def hpa_placement(
+    hg: Hypergraph, n: int, capacity: float, seed: int = 0, nruns: int = 2, **_
+) -> Placement:
+    """Plain HPA into N_e partitions; no replication (extra partitions idle).
+
+    This is the paper's no-replication baseline: its span does not improve as
+    partitions are added (fig. 6a's flat line)."""
+    ne = min_partitions(hg, capacity)
+    assign = hpa_mod.partition(hg, ne, capacity, seed=seed, nruns=nruns)
+    return _assign_to_placement(hg, assign, n, capacity)
+
+
+# ----------------------------------------------------------- residual helpers
+def _residual_edges(hg: Hypergraph, pl: Placement, min_span: int) -> np.ndarray:
+    """Edge ids with span > min_span (pruneHypergraphBySpan keeps these)."""
+    keep = []
+    for e in range(hg.num_edges):
+        if len(greedy_set_cover(hg.edge(e), pl.member)) > min_span:
+            keep.append(e)
+    return np.asarray(keep, dtype=np.int64)
+
+
+# ------------------------------------------------------------ Algorithm 1: IHPA
+def ihpa(
+    hg: Hypergraph, n: int, capacity: float, seed: int = 0, nruns: int = 2, **_
+) -> Placement:
+    ne = min_partitions(hg, capacity)
+    assign = hpa_mod.partition(hg, ne, capacity, seed=seed, nruns=nruns)
+    pl = _assign_to_placement(hg, assign, n, capacity)
+    used = ne
+    round_ = 0
+    while used < n:
+        round_ += 1
+        edge_ids = _residual_edges(hg, pl, 1)
+        if len(edge_ids) == 0:
+            break
+        resid = hg.subhypergraph_edges(edge_ids)
+        resid, old_ids = resid.relabel()
+        rem_parts = n - used
+        rem_cap = rem_parts * capacity
+        if resid.total_node_weight() > rem_cap:
+            # §4.2 text: drop lowest-span hyperedges one at a time (these gain
+            # least from replication) until the residual fits
+            spans = np.asarray(
+                [len(greedy_set_cover(old_ids[resid.edge(e)], pl.member))
+                 for e in range(resid.num_edges)]
+            )
+            order = np.argsort(spans, kind="stable")  # ascending span
+            pin_deg = np.bincount(resid.edge_nodes, minlength=resid.num_nodes)
+            live_w = float(
+                resid.node_weights[np.flatnonzero(pin_deg > 0)].sum()
+            )
+            keep_mask = np.ones(resid.num_edges, dtype=bool)
+            for e in order:
+                if live_w <= rem_cap:
+                    break
+                keep_mask[e] = False
+                for u in resid.edge(int(e)):
+                    pin_deg[u] -= 1
+                    if pin_deg[u] == 0:
+                        live_w -= float(resid.node_weights[u])
+            resid = resid.subhypergraph_edges(np.flatnonzero(keep_mask))
+            sub, sub_ids = resid.relabel()
+            old_ids = old_ids[sub_ids]
+            resid = sub
+            if resid.num_edges == 0 or resid.num_nodes == 0:
+                break
+        n_new = min(rem_parts,
+                    max(1, int(np.ceil(resid.total_node_weight() / capacity))))
+        sub_assign = hpa_mod.partition(
+            resid, n_new, capacity, seed=seed + round_, nruns=nruns
+        )
+        for v_new, p in enumerate(sub_assign):
+            pl.member[used + p, old_ids[v_new]] = True
+        used += n_new
+    return pl
+
+
+# -------------------------------------------------------------- Algorithm 2: DS
+def ds(
+    hg: Hypergraph, n: int, capacity: float, seed: int = 0, nruns: int = 2, **_
+) -> Placement:
+    ne = min_partitions(hg, capacity)
+    assign = hpa_mod.partition(hg, ne, capacity, seed=seed, nruns=nruns)
+    pl = _assign_to_placement(hg, assign, n, capacity)
+    used = ne
+    while used < n:
+        edge_ids = _residual_edges(hg, pl, 1)
+        if len(edge_ids) == 0:
+            break
+        resid = hg.subhypergraph_edges(edge_ids)
+        dense_nodes = resid.k_densest_nodes(capacity)
+        if len(dense_nodes) == 0:
+            break
+        pl.member[used, dense_nodes] = True
+        used += 1
+    return pl
+
+
+# ------------------------------------------------------------- Algorithm 3: PRA
+def _hitting_set(sets: list[list[int]]) -> list[int]:
+    """Greedy hitting set: repeatedly take the element in the most sets."""
+    remaining = [set(s) for s in sets if s]
+    hit: list[int] = []
+    while remaining:
+        counts: dict[int, int] = {}
+        for s in remaining:
+            for x in s:
+                counts[x] = counts.get(x, 0) + 1
+        best = max(counts.items(), key=lambda kv: (kv[1], -kv[0]))[0]
+        hit.append(best)
+        remaining = [s for s in remaining if best not in s]
+    return hit
+
+
+def pra(
+    hg: Hypergraph, n: int, capacity: float, seed: int = 0, nruns: int = 2, **_
+) -> Placement:
+    ne = min_partitions(hg, capacity)
+    assign = hpa_mod.partition(hg, ne, capacity, seed=seed, nruns=nruns)
+    pl0 = _assign_to_placement(hg, assign, ne, capacity)
+
+    # score_v = #edges where v is the only member of its partition (line 4)
+    score = np.zeros(hg.num_nodes, dtype=np.float64)
+    for e in range(hg.num_edges):
+        pins = hg.edge(e)
+        parts, counts = np.unique(assign[pins], return_counts=True)
+        solo = parts[counts == 1]
+        if len(solo):
+            solo_set = set(int(p) for p in solo)
+            for v in pins:
+                if int(assign[v]) in solo_set:
+                    score[v] += hg.edge_weights[e]
+
+    budget = n * capacity - hg.total_node_weight()  # spare replication room
+    mutable = hg.copy_mutable()
+    origins = list(range(hg.num_nodes))  # origins[new_id] = original item id
+    node_ptr, node_edges = hg.incidence()
+    order = np.argsort(-score, kind="stable")
+    for v in order:
+        if budget < hg.node_weights[v] or score[v] <= 0:
+            continue
+        ev = node_edges[node_ptr[v] : node_ptr[v + 1]]
+        # spanning partitions of e \ {v}: the partitions each edge must visit
+        # anyway for its *other* items — copies of v are anchored to those
+        # (fig. 3: distribute copies so incident hyperedges entangle)
+        span_sets = []
+        for e in ev:
+            others = hg.edge(int(e))
+            others = others[others != v]
+            span_sets.append(
+                list(greedy_set_cover(others, pl0.member)) if len(others) else []
+            )
+        hit = _hitting_set(span_sets)
+        if len(hit) <= 1:
+            continue
+        # original v serves the first hitting-set member; each further member
+        # gets a fresh copy, and edges spanned by it are rewired to that copy
+        copies = {hit[0]: int(v)}
+        for g in hit[1:]:
+            if budget < hg.node_weights[v]:
+                break
+            copies[g] = mutable.add_node_copy(int(v))
+            origins.append(int(v))
+            budget -= hg.node_weights[v]
+        for e, spans in zip(ev, span_sets):
+            for g in hit:
+                if g in spans and g in copies:
+                    mutable.replace_in_edge(int(e), int(v), copies[g])
+                    break
+    replicated = mutable.freeze()
+    final_assign = hpa_mod.partition(
+        replicated, n, capacity, seed=seed + 1, nruns=nruns
+    )
+    # map copies back onto original item ids
+    pl = Placement.empty(n, hg.num_nodes, capacity, hg.node_weights)
+    copy_origin = np.asarray(origins, dtype=np.int64)
+    for new_v in range(replicated.num_nodes):
+        pl.member[final_assign[new_v], copy_origin[new_v]] = True
+    return pl
+
+
+# ----------------------------------------------------- Algorithms 4+5: LMBR
+class _LMBRState:
+    """Live set-cover assignment: for each edge, the partitions in its cover
+    and the items it reads from each (the 'improved' LMBR bookkeeping)."""
+
+    def __init__(self, hg: Hypergraph, pl: Placement):
+        self.hg = hg
+        self.pl = pl
+        self.edge_cover: list[dict[int, np.ndarray]] = []
+        # part_edges[p] = set of edges that access partition p
+        self.part_edges: list[set[int]] = [set() for _ in range(pl.num_partitions)]
+        for e in range(hg.num_edges):
+            chosen, accessed = cover_for_query(hg.edge(e), pl.member)
+            cov = {p: items for p, items in zip(chosen, accessed)}
+            self.edge_cover.append(cov)
+            for p in chosen:
+                self.part_edges[p].add(e)
+
+    def recompute_edge(self, e: int):
+        for p in self.edge_cover[e]:
+            self.part_edges[p].discard(e)
+        chosen, accessed = cover_for_query(self.hg.edge(e), self.pl.member)
+        self.edge_cover[e] = {p: items for p, items in zip(chosen, accessed)}
+        for p in chosen:
+            self.part_edges[p].add(e)
+
+    def spans(self) -> np.ndarray:
+        return np.asarray([len(c) for c in self.edge_cover])
+
+
+def _lmbr_max_gain(state: _LMBRState, src: int, dest: int):
+    """Algorithm 5: best group of items to copy src->dest and its gain
+    (benefit per unit weight copied).  Returns (gain, items) or (0, None).
+
+    Pure-Python peeling (no Hypergraph construction): this is LMBR's inner
+    loop, called O(N^2) times per move.  Items already resident on dest are
+    free pins (cost 0, never peeled) — the weighted generalization of the
+    paper's getKDensestNodes accounting."""
+    hg, pl = state.hg, state.pl
+    shared = state.part_edges[src] & state.part_edges[dest]
+    if not shared:
+        return 0.0, None
+    c_dest = pl.free_space(dest)
+    if c_dest <= 1e-12:
+        return 0.0, None
+    node_w = hg.node_weights
+    dest_row = pl.member[dest]
+    # project: for each shared edge, the items it reads from src
+    proj: list[tuple[float, list[int]]] = []  # (edge_weight, costly pins)
+    total_benefit = 0.0
+    for e in shared:
+        items = state.edge_cover[e].get(src)
+        if items is None or not len(items):
+            continue
+        costly = [int(v) for v in items if not dest_row[v]]
+        if not costly:
+            continue  # free benefit is claimed lazily by recompute_edge
+        we = float(hg.edge_weights[e])
+        proj.append((we, costly))
+        total_benefit += we
+    if not proj:
+        return 0.0, None
+    inc: dict[int, list[int]] = {}
+    for i, (_, pins) in enumerate(proj):
+        for v in pins:
+            inc.setdefault(v, []).append(i)
+    deg = {v: 0.0 for v in inc}
+    for i, (we, pins) in enumerate(proj):
+        for v in pins:
+            deg[v] += we
+    alive_nodes = set(inc)
+    alive_edge = [True] * len(proj)
+    total_w = sum(float(node_w[v]) for v in alive_nodes)
+    heap = [(d, v) for v, d in deg.items()]
+    heapq.heapify(heap)
+    best_gain, best_items = 0.0, None
+    while total_benefit > 1e-12 and alive_nodes:
+        if total_w <= c_dest + 1e-12:
+            gain = total_benefit / max(total_w, 1e-12)
+            if gain > best_gain:
+                best_gain = gain
+                best_items = list(alive_nodes)
+        # peel the lowest-degree alive node
+        while heap:
+            d, v = heapq.heappop(heap)
+            if v in alive_nodes and abs(d - deg[v]) < 1e-9:
+                break
+        else:
+            break
+        alive_nodes.discard(v)
+        total_w -= float(node_w[v])
+        for i in inc[v]:
+            if alive_edge[i]:
+                alive_edge[i] = False
+                we, pins = proj[i]
+                total_benefit -= we
+                for u in pins:
+                    if u != v and u in alive_nodes:
+                        deg[u] -= we
+                        heapq.heappush(heap, (deg[u], u))
+    if best_items is None:
+        return 0.0, None
+    return best_gain, np.asarray(sorted(best_items), dtype=np.int64)
+
+
+def lmbr(
+    hg: Hypergraph,
+    n: int,
+    capacity: float,
+    seed: int = 0,
+    nruns: int = 2,
+    max_moves: int | None = None,
+    initial: Placement | None = None,
+    **_,
+) -> Placement:
+    """Improved LMBR (Algorithm 4 + Algorithm 5).
+
+    `initial` warm-starts from an existing placement (incremental refits and
+    the paper's use of LMBR as a capacity-fixup subroutine)."""
+    if initial is not None:
+        pl = Placement(
+            initial.member.copy(), capacity, hg.node_weights
+        )
+    else:
+        # Algorithm 4 line 1: balanced N-way start (hMETIS's UBfactor formula
+        # allows only ~(C*N-total)/total slack, i.e. near-balance); the spare
+        # capacity in every partition is the replication budget for the moves
+        bal_cap = min(
+            capacity,
+            hg.total_node_weight() / n * 1.1 + float(hg.node_weights.max()),
+        )
+        assign = hpa_mod.partition(hg, n, bal_cap, seed=seed, nruns=nruns)
+        pl = _assign_to_placement(hg, assign, n, capacity)
+    state = _LMBRState(hg, pl)
+    if max_moves is None:
+        max_moves = 50 * n
+
+    # priority queue of (-gain, src, dest, version)
+    version = np.zeros((n, n), dtype=np.int64)
+    pq: list[tuple[float, int, int, int]] = []
+
+    def push(src: int, dest: int):
+        gain, items = _lmbr_max_gain(state, src, dest)
+        version[src, dest] += 1
+        if gain > 0 and items is not None:
+            heapq.heappush(pq, (-gain, src, dest, int(version[src, dest])))
+
+    for src in range(n):
+        for dest in range(n):
+            if src != dest:
+                push(src, dest)
+
+    moves = 0
+    while pq and moves < max_moves:
+        neg_gain, src, dest, ver = heapq.heappop(pq)
+        if ver != version[src, dest]:
+            continue  # stale entry
+        gain, items = _lmbr_max_gain(state, src, dest)  # re-verify vs live state
+        if items is None or gain <= 0:
+            continue
+        w = hg.node_weights[items].sum()
+        if w > pl.free_space(dest) + 1e-9:
+            push(src, dest)
+            continue
+        # apply the move: copy items into dest
+        pl.member[dest, items] = True
+        moves += 1
+        # recompute covers of edges that might benefit (those reading src
+        # and touching dest or any moved item)
+        item_set = set(int(v) for v in items)
+        affected = set()
+        for e in state.part_edges[src] | state.part_edges[dest]:
+            if any(int(v) in item_set for v in hg.edge(e)):
+                affected.add(e)
+        for e in affected:
+            state.recompute_edge(e)
+        # refresh PQ entries involving dest (Algorithm 4 lines 12-15)
+        for g in range(n):
+            if g != dest:
+                push(g, dest)
+                push(dest, g)
+        push(src, dest)
+    return pl
+
+
+ALGORITHMS: dict[str, Callable[..., Placement]] = {
+    "random": random_placement,
+    "hpa": hpa_placement,
+    "ihpa": ihpa,
+    "ds": ds,
+    "pra": pra,
+    "lmbr": lmbr,
+}

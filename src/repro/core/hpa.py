@@ -1,0 +1,370 @@
+"""HPA: a multilevel k-way hypergraph partitioner (hMETIS stand-in).
+
+The paper uses hMETIS as a black box.  hMETIS is closed-source and not
+installable offline, so we implement our own multilevel partitioner with the
+same interface semantics the paper relies on:
+
+  * k-way partitioning of a node-weighted hypergraph,
+  * a hard per-partition capacity (the paper drives hMETIS's UBfactor so that
+    no partition exceeds C; we take C directly),
+  * minimizes the connectivity metric  sum_e w_e * (lambda_e - 1)  which is
+    exactly (total span - #queries) when each item has a single copy — i.e.
+    the right objective for the paper's average-span goal.
+
+Structure: (1) coarsening by connectivity-weighted matching, (2) greedy
+initial partitioning with random restarts, (3) FM-style refinement at every
+uncoarsening level, (4) capacity fixup.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .hypergraph import Hypergraph
+
+__all__ = ["partition", "connectivity_cost", "ubfactor"]
+
+_MAX_EDGE_FOR_MATCH = 64  # skip huge hyperedges during matching (hMETIS-like)
+
+
+def ubfactor(capacity: float, num_partitions: int, total_items: float) -> float:
+    """The paper's UBfactor formula (§4.1) — retained for interface parity.
+
+    UBfactor = 100 * (C*N - totalItems) / (totalItems * N)
+    """
+    return 100.0 * (capacity * num_partitions - total_items) / (
+        total_items * num_partitions
+    )
+
+
+def connectivity_cost(hg: Hypergraph, assign: np.ndarray, k: int) -> float:
+    """sum_e w_e * (lambda_e - 1)."""
+    cost = 0.0
+    for e in range(hg.num_edges):
+        parts = np.unique(assign[hg.edge(e)])
+        cost += hg.edge_weights[e] * (len(parts) - 1)
+    return cost
+
+
+def _edge_part_counts(hg: Hypergraph, assign: np.ndarray, k: int) -> np.ndarray:
+    """cnt[e, p] = number of pins of edge e in partition p."""
+    cnt = np.zeros((hg.num_edges, k), dtype=np.int32)
+    pin_edge = np.repeat(
+        np.arange(hg.num_edges, dtype=np.int64), np.diff(hg.edge_ptr)
+    )
+    np.add.at(cnt, (pin_edge, assign[hg.edge_nodes]), 1)
+    return cnt
+
+
+# --------------------------------------------------------------- coarsening
+def _coarsen_once(hg: Hypergraph, capacity: float, rng: np.random.Generator):
+    """One level of connectivity-weighted matching.  Returns (coarse_hg, map)
+    where map[v] = coarse cluster id."""
+    n = hg.num_nodes
+    node_ptr, node_edges = hg.incidence()
+    match = np.full(n, -1, dtype=np.int64)
+    order = rng.permutation(n)
+    esz = hg.edge_sizes()
+    for v in order:
+        if match[v] != -1:
+            continue
+        # score neighbors by sum(w_e / (|e|-1)) over shared edges
+        scores: dict[int, float] = {}
+        for e in node_edges[node_ptr[v] : node_ptr[v + 1]]:
+            s = esz[e]
+            if s < 2 or s > _MAX_EDGE_FOR_MATCH:
+                continue
+            we = hg.edge_weights[e] / (s - 1)
+            for u in hg.edge(int(e)):
+                if u != v and match[u] == -1:
+                    scores[int(u)] = scores.get(int(u), 0.0) + we
+        best_u, best_s = -1, 0.0
+        wv = hg.node_weights[v]
+        for u, s in scores.items():
+            if s > best_s and wv + hg.node_weights[u] <= capacity:
+                best_u, best_s = u, s
+        if best_u >= 0:
+            match[v] = best_u
+            match[best_u] = v
+        else:
+            match[v] = v
+    # build cluster ids
+    cmap = np.full(n, -1, dtype=np.int64)
+    nxt = 0
+    for v in range(n):
+        if cmap[v] == -1:
+            cmap[v] = nxt
+            if match[v] != v and match[v] != -1:
+                cmap[match[v]] = nxt
+            nxt += 1
+    # contract
+    cw = np.zeros(nxt, dtype=np.float64)
+    np.add.at(cw, cmap, hg.node_weights)
+    # rebuild edges on clusters, dedup identical edges
+    edge_map: dict[tuple, float] = {}
+    for e in range(hg.num_edges):
+        pins = tuple(sorted(set(int(cmap[u]) for u in hg.edge(e))))
+        if len(pins) < 2:
+            continue
+        edge_map[pins] = edge_map.get(pins, 0.0) + float(hg.edge_weights[e])
+    edges = list(edge_map.keys())
+    weights = np.asarray([edge_map[e] for e in edges], dtype=np.float64)
+    coarse = Hypergraph.from_edges(
+        edges, num_nodes=nxt, node_weights=cw, edge_weights=weights
+    )
+    return coarse, cmap
+
+
+# ------------------------------------------------------- initial partitioning
+def _initial_partition(
+    hg: Hypergraph, k: int, capacity: float, rng: np.random.Generator
+) -> np.ndarray:
+    """Greedy growth: place heavy nodes first into the partition with max
+    connectivity gain that still has room."""
+    n = hg.num_nodes
+    assign = np.full(n, -1, dtype=np.int64)
+    loads = np.zeros(k, dtype=np.float64)
+    node_ptr, node_edges = hg.incidence()
+    # heaviest-first (FFD-style, keeps weighted instances packable), degree
+    # as tie-break so connected nodes cluster; random jitter de-correlates runs
+    deg = hg.degrees()
+    wspan = hg.node_weights.max() - hg.node_weights.min()
+    key = deg + rng.random(n)
+    if wspan > 1e-12:
+        key = hg.node_weights * (2 * deg.max() + 2) + key
+    order = np.argsort(-key, kind="stable")
+    cnt = np.zeros((hg.num_edges, k), dtype=np.int32)
+    for v in order:
+        wv = hg.node_weights[v]
+        edges = node_edges[node_ptr[v] : node_ptr[v + 1]]
+        gain = np.zeros(k, dtype=np.float64)
+        if len(edges):
+            sub = cnt[edges]  # (d, k)
+            gain = (sub > 0).astype(np.float64).T @ hg.edge_weights[edges]
+        feasible = loads + wv <= capacity
+        if not feasible.any():
+            p = int(np.argmin(loads))  # fixup pass will repair
+        else:
+            gain = np.where(feasible, gain, -np.inf)
+            # tie-break toward least-loaded partitions for balance
+            p = int(np.argmax(gain - 1e-9 * loads))
+        assign[v] = p
+        loads[p] += wv
+        if len(edges):
+            cnt[edges, p] += 1
+    return assign
+
+
+# ----------------------------------------------------------------- refinement
+def _move_gains(cnt, edges, w, a):
+    """Connectivity gain of moving a node (with incident `edges`, weights `w`,
+    currently in part `a`) to every part.  gain[b]: edges where the node is
+    the sole pin in `a` stop spanning `a` (gain w_e if `b` already pinned);
+    edges unpinned in `b` start spanning it (loss w_e unless the sole pin
+    travels along)."""
+    sub = cnt[edges]  # (d, k)
+    col_a = sub[:, a]
+    sole = col_a == 1
+    gain = ((sole[:, None] & (sub > 0)) * w[:, None]).sum(axis=0) - (
+        ((~sole)[:, None] & (sub == 0)) * w[:, None]
+    ).sum(axis=0)
+    gain[a] = 0.0
+    return gain
+
+
+def _refine(
+    hg: Hypergraph,
+    assign: np.ndarray,
+    k: int,
+    capacity: float,
+    rng: np.random.Generator,
+    passes: int = 3,
+    swap_candidates: int = 24,
+) -> np.ndarray:
+    """FM-style greedy passes on the connectivity objective, with pairwise
+    swaps as a fallback when capacity blocks a single move (the zero-slack
+    regime: |V| == k*C)."""
+    if hg.num_edges == 0 or k == 1:
+        return assign
+    node_ptr, node_edges = hg.incidence()
+    cnt = _edge_part_counts(hg, assign, k)
+    loads = np.zeros(k, dtype=np.float64)
+    np.add.at(loads, assign, hg.node_weights)
+    part_nodes: list[set[int]] = [set() for _ in range(k)]
+    for v, p in enumerate(assign):
+        part_nodes[int(p)].add(v)
+    for _ in range(passes):
+        improved = False
+        for v in rng.permutation(hg.num_nodes):
+            edges = node_edges[node_ptr[v] : node_ptr[v + 1]]
+            if len(edges) == 0:
+                continue
+            a = int(assign[v])
+            wv = hg.node_weights[v]
+            w = hg.edge_weights[edges]
+            gain = _move_gains(cnt, edges, w, a)
+            feasible = loads + wv <= capacity
+            feasible[a] = True
+            move_gain = np.where(feasible, gain, -np.inf)
+            b = int(np.argmax(move_gain))
+            if b != a and move_gain[b] > 1e-12:
+                assign[v] = b
+                loads[a] -= wv
+                loads[b] += wv
+                cnt[edges, a] -= 1
+                cnt[edges, b] += 1
+                part_nodes[a].discard(int(v))
+                part_nodes[b].add(int(v))
+                improved = True
+                continue
+            # ---- swap fallback: the best *infeasible* target might pay for
+            # sending one of its nodes back
+            b = int(np.argmax(gain))
+            if b == a or gain[b] <= 1e-12 or len(part_nodes[b]) == 0:
+                continue
+            # tentatively move v -> b
+            cnt[edges, a] -= 1
+            cnt[edges, b] += 1
+            cand = list(part_nodes[b])
+            if len(cand) > swap_candidates:
+                cand = [cand[i] for i in rng.choice(len(cand),
+                                                    swap_candidates,
+                                                    replace=False)]
+            best_u, best_total = -1, 1e-12
+            for u in cand:
+                wu = hg.node_weights[u]
+                if loads[a] - wv + wu > capacity or loads[b] + wv - wu > capacity:
+                    continue
+                eu = node_edges[node_ptr[u] : node_ptr[u + 1]]
+                if len(eu) == 0:
+                    g_u = 0.0
+                else:
+                    g_u = _move_gains(cnt, eu, hg.edge_weights[eu], b)[a]
+                total = gain[b] + g_u
+                if total > best_total:
+                    best_u, best_total = int(u), total
+            if best_u >= 0:
+                u = best_u
+                eu = node_edges[node_ptr[u] : node_ptr[u + 1]]
+                cnt[eu, b] -= 1
+                cnt[eu, a] += 1
+                assign[v], assign[u] = b, a
+                loads[a] += hg.node_weights[u] - wv
+                loads[b] += wv - hg.node_weights[u]
+                part_nodes[a].discard(int(v))
+                part_nodes[a].add(u)
+                part_nodes[b].discard(u)
+                part_nodes[b].add(int(v))
+                improved = True
+            else:
+                cnt[edges, a] += 1  # revert tentative
+                cnt[edges, b] -= 1
+        if not improved:
+            break
+    return assign
+
+
+def _fixup_capacity(
+    hg: Hypergraph, assign: np.ndarray, k: int, capacity: float
+) -> np.ndarray:
+    """Repair capacity violations by evicting the loosest nodes (the paper
+    uses an LMBR-style move for this; greedy lowest-connectivity move is the
+    same idea without replication)."""
+    loads = np.zeros(k, dtype=np.float64)
+    np.add.at(loads, assign, hg.node_weights)
+    node_ptr, node_edges = hg.incidence()
+    for p in range(k):
+        guard = 0
+        while loads[p] > capacity + 1e-9 and guard < hg.num_nodes:
+            guard += 1
+            members = np.flatnonzero(assign == p)
+            # evict the node with the fewest incident pins in p (lightest on ties)
+            best_v, best_key = -1, (np.inf, np.inf)
+            for v in members:
+                d = len(node_edges[node_ptr[v] : node_ptr[v + 1]])
+                kkey = (d, -hg.node_weights[v])
+                if kkey < best_key:
+                    best_v, best_key = int(v), kkey
+            wv = hg.node_weights[best_v]
+            frees = capacity - loads
+            frees[p] = -np.inf
+            tgt = int(np.argmax(frees))
+            if frees[tgt] >= wv - 1e-9:
+                assign[best_v] = tgt
+                loads[p] -= wv
+                loads[tgt] += wv
+                continue
+            # swap fallback: exchange with a lighter node elsewhere
+            done = False
+            for q in np.argsort(-frees):
+                q = int(q)
+                if q == p:
+                    continue
+                for u in np.flatnonzero(assign == q):
+                    wu = hg.node_weights[u]
+                    if (wu < wv
+                            and loads[q] - wu + wv <= capacity + 1e-9
+                            and loads[p] - wv + wu <= capacity + 1e-9 * 0 + loads[p]):
+                        assign[best_v], assign[int(u)] = q, p
+                        loads[p] += wu - wv
+                        loads[q] += wv - wu
+                        done = True
+                        break
+                if done:
+                    break
+            if not done:
+                raise ValueError("cannot satisfy capacity constraints")
+    return assign
+
+
+# -------------------------------------------------------------------- driver
+def partition(
+    hg: Hypergraph,
+    k: int,
+    capacity: float | None = None,
+    seed: int = 0,
+    nruns: int = 2,
+    passes: int = 3,
+    coarsen_to: int | None = None,
+) -> np.ndarray:
+    """Partition `hg` into `k` parts under per-part `capacity`.
+
+    Returns assign: (V,) int64, values in [0, k).  Items with zero degree are
+    balanced across parts by weight.
+    """
+    n = hg.num_nodes
+    if capacity is None:
+        capacity = hg.total_node_weight() / k * 1.05 + hg.node_weights.max()
+    if hg.total_node_weight() > k * capacity + 1e-9:
+        raise ValueError(
+            f"items (w={hg.total_node_weight()}) cannot fit {k} x {capacity}"
+        )
+    if k <= 1:
+        return np.zeros(n, dtype=np.int64)
+    if coarsen_to is None:
+        coarsen_to = max(128, 12 * k)
+
+    best_assign, best_cost = None, np.inf
+    for run in range(max(1, nruns)):
+        rng = np.random.default_rng(seed + 7919 * run)
+        # ---- coarsening phase
+        levels: list[tuple[Hypergraph, np.ndarray]] = []
+        cur = hg
+        while cur.num_nodes > coarsen_to:
+            coarse, cmap = _coarsen_once(cur, capacity, rng)
+            if coarse.num_nodes >= 0.95 * cur.num_nodes:
+                break  # diminishing returns
+            levels.append((cur, cmap))
+            cur = coarse
+        # ---- initial partition on coarsest graph
+        assign = _initial_partition(cur, k, capacity, rng)
+        assign = _refine(cur, assign, k, capacity, rng, passes)
+        # ---- uncoarsen + refine
+        for fine, cmap in reversed(levels):
+            assign = assign[cmap]
+            assign = _refine(fine, assign, k, capacity, rng, passes)
+        assign = _fixup_capacity(hg, assign, k, capacity)
+        cost = connectivity_cost(hg, assign, k)
+        if cost < best_cost:
+            best_cost, best_assign = cost, assign.copy()
+    return best_assign

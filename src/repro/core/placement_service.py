@@ -1,0 +1,226 @@
+"""Production placement API.
+
+Wraps the paper's algorithms behind a serializable, hierarchical service used
+by the framework's data pipeline, MoE runtime and checkpoint manager:
+
+  * PlacementPlan   — frozen result; JSON-serializable; answers
+    `partitions_of(item)`, `select(query)` (greedy-set-cover replica
+    selection), span statistics.
+  * PlacementService.fit        — one-level placement (paper §4).
+  * PlacementService.fit_hierarchical — two-level pod/host placement for TPU
+    fleets (ICI inside a pod ≫ DCN across pods); span is minimized at the pod
+    level first, then per pod at the host level.  Faithful generalization —
+    the paper notes partitions may be "racks or even datacenters".
+  * PlacementService.refit      — incremental re-placement when the workload
+    drifts: LMBR warm-started from the current plan (new replicas only move
+    into free space; no full repartition, cheap to apply online).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Sequence
+
+import numpy as np
+
+from .algorithms import ALGORITHMS, lmbr, min_partitions
+from .hypergraph import Hypergraph
+from .setcover import Placement, cover_for_query, greedy_set_cover
+
+__all__ = ["PlacementPlan", "HierarchicalPlan", "PlacementService"]
+
+
+@dataclasses.dataclass
+class PlacementPlan:
+    member: np.ndarray  # (N, V) bool
+    capacity: float
+    node_weights: np.ndarray
+    algorithm: str
+
+    # --------------------------------------------------------------- queries
+    def partitions_of(self, item: int) -> np.ndarray:
+        return np.flatnonzero(self.member[:, item])
+
+    def select(self, query: Sequence[int]):
+        """Replica selection: (partitions, items-read-from-each)."""
+        return cover_for_query(np.asarray(query, dtype=np.int64), self.member)
+
+    def span(self, query: Sequence[int]) -> int:
+        return len(greedy_set_cover(np.asarray(query, dtype=np.int64), self.member))
+
+    def avg_span(self, queries: Sequence[Sequence[int]]) -> float:
+        return float(np.mean([self.span(q) for q in queries])) if queries else 0.0
+
+    def as_placement(self) -> Placement:
+        return Placement(self.member, self.capacity, self.node_weights)
+
+    @property
+    def num_partitions(self) -> int:
+        return self.member.shape[0]
+
+    # --------------------------------------------------------- serialization
+    def to_json(self) -> str:
+        return json.dumps(
+            dict(
+                capacity=self.capacity,
+                algorithm=self.algorithm,
+                node_weights=self.node_weights.tolist(),
+                partitions=[
+                    np.flatnonzero(self.member[p]).tolist()
+                    for p in range(self.member.shape[0])
+                ],
+                num_items=int(self.member.shape[1]),
+            )
+        )
+
+    @staticmethod
+    def from_json(s: str) -> "PlacementPlan":
+        d = json.loads(s)
+        member = np.zeros((len(d["partitions"]), d["num_items"]), dtype=bool)
+        for p, items in enumerate(d["partitions"]):
+            member[p, np.asarray(items, dtype=np.int64)] = True
+        return PlacementPlan(
+            member,
+            float(d["capacity"]),
+            np.asarray(d["node_weights"], dtype=np.float64),
+            d["algorithm"],
+        )
+
+
+@dataclasses.dataclass
+class HierarchicalPlan:
+    """Two-level placement: pods then hosts-within-pod.
+
+    host_member is the flat (num_pods*hosts_per_pod, V) matrix; global host id
+    = pod * hosts_per_pod + local host."""
+
+    pod_plan: PlacementPlan
+    host_member: np.ndarray
+    hosts_per_pod: int
+    host_capacity: float
+    node_weights: np.ndarray
+
+    def select(self, query: Sequence[int]):
+        return cover_for_query(
+            np.asarray(query, dtype=np.int64), self.host_member
+        )
+
+    def spans(self, query: Sequence[int]) -> tuple[int, int]:
+        """(pod_span, host_span) via hierarchical set cover: pods first, then
+        hosts restricted to the chosen pods."""
+        q = np.asarray(query, dtype=np.int64)
+        pods = greedy_set_cover(q, self.pod_plan.member)
+        host_rows = []
+        for p in pods:
+            lo = p * self.hosts_per_pod
+            host_rows.extend(range(lo, lo + self.hosts_per_pod))
+        sub = self.host_member[host_rows]
+        hosts = greedy_set_cover(q, sub)
+        return len(pods), len(hosts)
+
+    def weighted_span(self, query, pod_weight: float = 8.0) -> float:
+        """DCN hops are ~pod_weight x pricier than ICI hops."""
+        ps, hs = self.spans(query)
+        return pod_weight * (ps - 1) + (hs - 1)
+
+
+class PlacementService:
+    def __init__(self, algorithm: str = "lmbr", seed: int = 0, nruns: int = 2):
+        if algorithm not in ALGORITHMS:
+            raise KeyError(f"unknown algorithm {algorithm!r}; have {list(ALGORITHMS)}")
+        self.algorithm = algorithm
+        self.seed = seed
+        self.nruns = nruns
+
+    # ------------------------------------------------------------------ fit
+    def fit(
+        self,
+        queries: Sequence[Sequence[int]],
+        num_items: int,
+        num_partitions: int,
+        capacity: float,
+        node_weights: np.ndarray | None = None,
+        query_weights: np.ndarray | None = None,
+    ) -> PlacementPlan:
+        hg = Hypergraph.from_edges(
+            queries, num_nodes=num_items,
+            node_weights=node_weights, edge_weights=query_weights,
+        )
+        fn = ALGORITHMS[self.algorithm]
+        pl = fn(hg, num_partitions, capacity, seed=self.seed, nruns=self.nruns)
+        pl.validate()
+        return PlacementPlan(pl.member, capacity, hg.node_weights, self.algorithm)
+
+    # -------------------------------------------------------------- 2-level
+    def fit_hierarchical(
+        self,
+        queries: Sequence[Sequence[int]],
+        num_items: int,
+        num_pods: int,
+        hosts_per_pod: int,
+        host_capacity: float,
+        node_weights: np.ndarray | None = None,
+    ) -> HierarchicalPlan:
+        pod_capacity = host_capacity * hosts_per_pod
+        pod_plan = self.fit(
+            queries, num_items, num_pods, pod_capacity, node_weights
+        )
+        hg = Hypergraph.from_edges(queries, num_nodes=num_items,
+                                   node_weights=node_weights)
+        host_member = np.zeros(
+            (num_pods * hosts_per_pod, num_items), dtype=bool
+        )
+        fn = ALGORITHMS[self.algorithm]
+        for pod in range(num_pods):
+            pod_items = np.flatnonzero(pod_plan.member[pod])
+            if len(pod_items) == 0:
+                continue
+            # queries restricted to this pod's replica of their items
+            local_queries = []
+            mask = np.zeros(num_items, dtype=bool)
+            mask[pod_items] = True
+            for e in range(hg.num_edges):
+                q = hg.edge(e)
+                lq = q[mask[q]]
+                if len(lq) >= 2:
+                    local_queries.append(lq)
+            remap = np.full(num_items, -1, dtype=np.int64)
+            remap[pod_items] = np.arange(len(pod_items))
+            sub_hg = Hypergraph.from_edges(
+                [remap[q] for q in local_queries] or [[]],
+                num_nodes=len(pod_items),
+                node_weights=hg.node_weights[pod_items],
+            )
+            sub_pl = fn(
+                sub_hg, hosts_per_pod, host_capacity,
+                seed=self.seed + pod, nruns=self.nruns,
+            )
+            for h in range(hosts_per_pod):
+                host_member[pod * hosts_per_pod + h, pod_items] = sub_pl.member[h]
+        return HierarchicalPlan(
+            pod_plan, host_member, hosts_per_pod, host_capacity, hg.node_weights
+        )
+
+    # ---------------------------------------------------------------- refit
+    def refit(
+        self,
+        plan: PlacementPlan,
+        queries: Sequence[Sequence[int]],
+        max_moves: int = 64,
+    ) -> PlacementPlan:
+        """Incremental adaptation to workload drift: LMBR warm-started from
+        the current placement; only copies items into free space (existing
+        replicas never move, so the delta is cheap to apply online)."""
+        hg = Hypergraph.from_edges(
+            queries, num_nodes=plan.member.shape[1],
+            node_weights=plan.node_weights,
+        )
+        pl = lmbr(
+            hg, plan.num_partitions, plan.capacity,
+            seed=self.seed, initial=plan.as_placement(), max_moves=max_moves,
+        )
+        pl.validate()
+        return PlacementPlan(
+            pl.member, plan.capacity, plan.node_weights, f"{plan.algorithm}+refit"
+        )

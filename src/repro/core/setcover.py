@@ -1,0 +1,151 @@
+"""Replica selection via greedy set cover (paper §3, §4.1).
+
+With replication, computing a query's span is the minimum set-cover problem
+(NP-hard); the greedy algorithm gives the best-known log|Q| approximation and
+doubles as the *replica selection* policy: the chosen partitions tell each
+query which copy of each item to read.
+
+`Placement` is the layout object shared by every algorithm: a boolean
+membership matrix (partitions x items) plus per-partition weight accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = ["Placement", "greedy_set_cover", "cover_for_query"]
+
+
+@dataclasses.dataclass
+class Placement:
+    """Layout of items onto partitions. member[p, v] == True iff a copy of
+    item v is stored on partition p."""
+
+    member: np.ndarray  # (N, V) bool
+    capacity: float
+    node_weights: np.ndarray  # (V,)
+
+    @staticmethod
+    def empty(num_partitions: int, num_items: int, capacity: float,
+              node_weights: np.ndarray | None = None) -> "Placement":
+        if node_weights is None:
+            node_weights = np.ones(num_items, dtype=np.float64)
+        return Placement(
+            np.zeros((num_partitions, num_items), dtype=bool),
+            float(capacity),
+            np.asarray(node_weights, dtype=np.float64),
+        )
+
+    # ------------------------------------------------------------- accessors
+    @property
+    def num_partitions(self) -> int:
+        return self.member.shape[0]
+
+    @property
+    def num_items(self) -> int:
+        return self.member.shape[1]
+
+    def partition_items(self, p: int) -> np.ndarray:
+        return np.flatnonzero(self.member[p])
+
+    def partition_weight(self, p: int) -> float:
+        return float(self.node_weights[self.member[p]].sum())
+
+    def partition_weights(self) -> np.ndarray:
+        return self.member @ self.node_weights
+
+    def free_space(self, p: int) -> float:
+        return self.capacity - self.partition_weight(p)
+
+    def replication_factor(self) -> float:
+        placed = self.member.sum(axis=0)
+        placed = placed[placed > 0]
+        return float(placed.mean()) if len(placed) else 0.0
+
+    def copies_of(self, v: int) -> np.ndarray:
+        return np.flatnonzero(self.member[:, v])
+
+    # ------------------------------------------------------------- mutation
+    def add(self, p: int, items) -> None:
+        self.member[p, np.asarray(items, dtype=np.int64)] = True
+
+    def add_partition(self) -> int:
+        self.member = np.vstack(
+            [self.member, np.zeros((1, self.num_items), dtype=bool)]
+        )
+        return self.num_partitions - 1
+
+    def validate(self, tol: float = 1e-9) -> None:
+        w = self.partition_weights()
+        if (w > self.capacity + tol).any():
+            bad = int(np.argmax(w))
+            raise ValueError(
+                f"partition {bad} over capacity: {w[bad]:.1f} > {self.capacity}"
+            )
+        placed = self.member.any(axis=0)
+        # items that appear in no partition are only legal if they are phantom
+        # (weight 0) items
+        missing = np.flatnonzero(~placed & (self.node_weights > 0))
+        if len(missing):
+            raise ValueError(f"{len(missing)} items unplaced, e.g. {missing[:5]}")
+
+
+def greedy_set_cover(query: np.ndarray, member: np.ndarray) -> list[int]:
+    """getSpanningPartitions: minimal-ish set of partitions covering `query`.
+
+    Iteratively picks the partition with the largest intersection with the
+    still-uncovered items (ties -> lowest partition id, deterministic).
+    """
+    query = np.asarray(query, dtype=np.int64)
+    remaining = np.ones(len(query), dtype=bool)
+    sub = member[:, query]  # (N, |q|)
+    chosen: list[int] = []
+    while remaining.any():
+        gains = (sub & remaining[None, :]).sum(axis=1)
+        p = int(np.argmax(gains))
+        if gains[p] == 0:
+            raise ValueError(
+                f"query items {query[remaining][:5]} not stored on any partition"
+            )
+        chosen.append(p)
+        remaining &= ~sub[p]
+    return chosen
+
+
+def cover_for_query(query: np.ndarray, member: np.ndarray):
+    """Like greedy_set_cover but also returns, per chosen partition, the item
+    ids the query reads from it (getAccessedItems for every member of the
+    cover).  Items are attributed to the first chosen partition that holds
+    them — i.e. the actual replica-selection decision."""
+    query = np.asarray(query, dtype=np.int64)
+    remaining = np.ones(len(query), dtype=bool)
+    sub = member[:, query]
+    chosen: list[int] = []
+    accessed: list[np.ndarray] = []
+    while remaining.any():
+        gains = (sub & remaining[None, :]).sum(axis=1)
+        p = int(np.argmax(gains))
+        if gains[p] == 0:
+            raise ValueError("query contains an unplaced item")
+        newly = sub[p] & remaining
+        chosen.append(p)
+        accessed.append(query[newly])
+        remaining &= ~newly
+    return chosen, accessed
+
+
+def query_span(query: np.ndarray, member: np.ndarray) -> int:
+    """getQuerySpan."""
+    return len(greedy_set_cover(query, member))
+
+
+def spans_for_workload(hg, placement: Placement) -> np.ndarray:
+    """Span of every hyperedge in `hg` under `placement` (vectorized loop)."""
+    member = placement.member
+    out = np.zeros(hg.num_edges, dtype=np.int64)
+    for e in range(hg.num_edges):
+        out[e] = len(greedy_set_cover(hg.edge(e), member))
+    return out

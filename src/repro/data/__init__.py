@@ -1,0 +1,1 @@
+from .pipeline import PlacementAwarePipeline, SyntheticTokenSource  # noqa: F401

@@ -1,0 +1,54 @@
+"""Perf-variant knobs for the §Perf hillclimb.
+
+Defaults reproduce the BASELINE; the dry-run's --variant flag (e.g.
+``--variant mla_decomp+accum8+sp``) flips knobs so each hypothesis gets its
+own lowered artifact, before/after recorded side by side in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+FLAGS = {
+    # MLA: use the decompressed (per-head K/V) formulation for s>1 paths
+    # instead of the absorbed latent form (hypothesis: absorbed q_lat/lat
+    # accumulators of (B,S,H,kv_lora) fp32 dominate train/prefill memory).
+    "mla_decomp": False,
+    # gradient accumulation: microbatch the train step (activation memory /
+    # accum_steps at the cost of accum_steps serial sub-steps).
+    "accum_steps": 1,
+    # sequence parallelism: keep inter-layer activations sequence-sharded on
+    # the model axis (norms/residuals run sharded; reduce-scatter+all-gather
+    # replaces all-reduce around TP blocks).
+    "sp": False,
+    # sp2: additionally keep attention QUERIES sequence-sharded (each query
+    # attends the full gathered K/V — K/V bytes are GQA-small, so the
+    # per-layer gather shrinks from activations (S*d) to caches (S*K*hd)).
+    "sp_attn": False,
+    # MoE dispatch capacity factor override (None = config value)
+    "moe_cf": None,
+}
+
+
+def set_variant(spec: str):
+    """'mla_decomp+accum8+sp+cf1.0' -> flag settings."""
+    reset()
+    for part in filter(None, spec.split("+")):
+        if part == "baseline":
+            continue
+        elif part == "mla_decomp":
+            FLAGS["mla_decomp"] = True
+        elif part.startswith("accum"):
+            FLAGS["accum_steps"] = int(part[len("accum"):])
+        elif part == "sp":
+            FLAGS["sp"] = True
+        elif part == "sp2":
+            FLAGS["sp"] = True
+            FLAGS["sp_attn"] = True
+        elif part.startswith("cf"):
+            FLAGS["moe_cf"] = float(part[2:])
+        else:
+            raise ValueError(f"unknown variant component {part!r}")
+
+
+def reset():
+    FLAGS.update(mla_decomp=False, accum_steps=1, sp=False, sp_attn=False,
+                 moe_cf=None)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel directory holds kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd wrapper: kernel on TPU, jnp reference elsewhere) and
+ref.py (the pure-jnp oracle the tests assert against, in interpret mode).
+
+The paper's own contribution is control-plane (data placement) — these
+kernels are the substrate hot spots under the assigned shape grid: 32k
+prefill attention, 32k-500k decode attention, and the Mamba2 SSD scan.
+"""
+
+from .flash_attention.ops import flash_attention  # noqa: F401
+from .decode_attention.ops import decode_attention  # noqa: F401
+from .ssd_scan.ops import ssd_scan  # noqa: F401

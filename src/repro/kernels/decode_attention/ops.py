@@ -1,0 +1,28 @@
+"""jit'd wrapper for flash-decode: kernel on TPU, reference elsewhere."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import decode_attention as _kernel
+from .ref import decode_attention_ref as _ref
+
+
+def decode_attention(q, k, v, kv_pos, q_pos, *, window=None, force=None,
+                     block_kv=256):
+    """Model layout: q (B,1,H,D) or (B,H,D); k/v (B,T,K,D)."""
+    squeeze = False
+    if q.ndim == 4:
+        q = q[:, 0]
+        squeeze = True
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+    impl = force or ("kernel" if jax.default_backend() == "tpu" else "ref")
+    if impl == "kernel":
+        o = _kernel(q, kT, vT, kv_pos, q_pos, window=window, block_kv=block_kv)
+    elif impl == "interpret":
+        o = _kernel(q, kT, vT, kv_pos, q_pos, window=window,
+                    block_kv=block_kv, interpret=True)
+    else:
+        o = _ref(q, kT, vT, kv_pos, q_pos, window=window)
+    return o[:, None] if squeeze else o

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-decode kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, kv_pos, q_pos, *, window=None):
+    """q: (B,H,D); k/v: (B,K,T,D); kv_pos: (B,T); q_pos: (B,)."""
+    b, h, d = q.shape
+    kheads = k.shape[1]
+    g = h // kheads
+    kx = jnp.repeat(k, g, axis=1)  # (B,H,T,D)
+    vx = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * (d ** -0.5)
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos[:, None])
+    if window is not None:
+        valid &= kv_pos > (q_pos[:, None] - window)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,bhtd->bhd", p, vx.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,32 @@
+"""jit'd public wrapper: Pallas kernel on TPU, reference elsewhere.
+
+The model layer (repro.models.attention.chunked_attention) is layout
+(B, S, H, D); kernels use (B, H, S, D) — this wrapper transposes at the
+boundary."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention as _kernel
+from .ref import flash_attention_ref as _ref
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, force=None,
+                    block_q=128, block_kv=128):
+    """q: (B, S, H, D); k/v: (B, T, K, D) — model layout.  `force` in
+    {None, "kernel", "interpret", "ref"} selects the implementation."""
+    qT = q.transpose(0, 2, 1, 3)
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+    backend = jax.default_backend()
+    impl = force or ("kernel" if backend == "tpu" else "ref")
+    if impl == "kernel":
+        o = _kernel(qT, kT, vT, causal=causal, window=window,
+                    block_q=block_q, block_kv=block_kv)
+    elif impl == "interpret":
+        o = _kernel(qT, kT, vT, causal=causal, window=window,
+                    block_q=block_q, block_kv=block_kv, interpret=True)
+    else:
+        o = _ref(qT, kT, vT, causal=causal, window=window)
+    return o.transpose(0, 2, 1, 3)

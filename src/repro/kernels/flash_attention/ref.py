@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention kernel (materializes the full
+(S, T) score matrix — only for test shapes)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B,H,S,D); k/v: (B,K,T,D).  Returns (B,H,S,D)."""
+    b, h, s, d = q.shape
+    kheads, t = k.shape[1], k.shape[2]
+    g = h // kheads
+    kx = jnp.repeat(k, g, axis=1)
+    vx = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum(
+        "bhsd,bhtd->bhst", q.astype(jnp.float32), kx.astype(jnp.float32)
+    ) * (d ** -0.5)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)

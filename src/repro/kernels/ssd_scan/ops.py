@@ -1,0 +1,17 @@
+"""jit'd wrapper for the SSD chunk scan."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import ssd_scan as _kernel
+from .ref import ssd_scan_ref as _ref
+
+
+def ssd_scan(x, dt, a, bmat, cmat, *, chunk=128, force=None):
+    impl = force or ("kernel" if jax.default_backend() == "tpu" else "ref")
+    if impl == "kernel":
+        return _kernel(x, dt, a, bmat, cmat, chunk=chunk)
+    if impl == "interpret":
+        return _kernel(x, dt, a, bmat, cmat, chunk=chunk, interpret=True)
+    return _ref(x, dt, a, bmat, cmat)

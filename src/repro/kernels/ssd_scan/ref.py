@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the SSD kernel: the naive O(S) recurrence.
+
+    h_t = exp(a * dt_t) h_{t-1} + dt_t * x_t B_t^T
+    y_t = C_t . h_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, a, bmat, cmat):
+    """x: (B,S,H,P); dt: (B,S,H); a: (H,); bmat/cmat: (B,S,N) -> (B,S,H,P)."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+
+    def step(hstate, inp):
+        xt, dtt, bt, ct = inp            # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(a[None, :] * dtt)                    # (B,H)
+        upd = (xt * dtt[..., None])[..., None] * bt[:, None, None, :]
+        hstate = decay[..., None, None] * hstate + upd       # (B,H,P,N)
+        yt = jnp.einsum("bn,bhpn->bhp", ct, hstate)
+        return hstate, yt
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        bmat.transpose(1, 0, 2).astype(jnp.float32),
+        cmat.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)  # (B,S,H,P)

@@ -1,0 +1,227 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh without allocating a single parameter.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--quick]
+
+Per cell this records: compile success, per-device memory analysis (proves
+the layout fits HBM), cost_analysis FLOPs/bytes, per-collective payload
+bytes, and the derived roofline terms (launch/roofline.py).  Results append
+to experiments/dryrun/<cell>.json which EXPERIMENTS.md and
+benchmarks/roofline_table.py read.
+
+The 512 virtual host devices exist ONLY here (first two lines above) — tests
+and benchmarks see the real single-device CPU.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import SHAPE_GRID, get_config, list_configs  # noqa: E402
+from repro.launch import roofline as rf  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import (  # noqa: E402
+    input_specs, make_prefill_step, make_serve_step, make_train_step,
+    opt_struct, param_struct, pick_optimizer, serve_cache_struct,
+    shape_skip_reason,
+)
+from repro.models import identity_dispatch  # noqa: E402
+from repro.optim.optimizers import make_optimizer  # noqa: E402
+from repro.parallel import batch_shardings, cache_shardings, param_shardings  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+OUT_DIR = os.path.abspath(OUT_DIR)
+
+
+def _mem_dict(mem) -> dict:
+    keys = [
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ]
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             chunk: int = 512, variant: str = "baseline",
+             mesh=None, extra_tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPE_GRID[shape_name]
+    rec = dict(arch=arch, shape=shape_name,
+               mesh="2x16x16" if multi_pod else "16x16",
+               variant=variant, kind=shape.kind)
+    skip = shape_skip_reason(cfg, shape)
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        return rec
+
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    from repro.parallel import set_active_mesh
+    set_active_mesh(mesh)  # enables in-model activation sharding pins
+    chips = int(np.prod(list(mesh.shape.values())))
+    ep_ranks = mesh.shape["model"]
+    dispatch = identity_dispatch(cfg.moe.num_experts, ep_ranks) if cfg.moe \
+        else None
+
+    t0 = time.time()
+    try:
+        pstruct = param_struct(cfg, moe_dispatch=dispatch)
+        pshard = param_shardings(pstruct, mesh)
+        specs = input_specs(cfg, shape)
+        if shape.kind == "train":
+            step, opt = make_train_step(cfg, moe_dispatch=dispatch,
+                                        chunk=chunk)
+            ostruct = opt_struct(cfg, opt, pstruct)
+            oshard = param_shardings(ostruct, mesh)
+            bshard = batch_shardings(specs["batch"], mesh)
+            fn = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                         donate_argnums=(0, 1))
+            args = (pstruct, ostruct, specs["batch"])
+            rec["optimizer"] = pick_optimizer(cfg)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, moe_dispatch=dispatch, chunk=chunk)
+            bshard = batch_shardings(specs["batch"], mesh)
+            fn = jax.jit(step, in_shardings=(pshard, bshard))
+            args = (pstruct, specs["batch"])
+        else:  # decode
+            window_only = shape.name == "long_500k"
+            step = make_serve_step(cfg, moe_dispatch=dispatch, chunk=chunk)
+            cstruct = serve_cache_struct(cfg, shape.global_batch,
+                                         shape.seq_len,
+                                         window_only=window_only)
+            cshard = cache_shardings(cstruct, mesh)
+            tshard = batch_shardings(
+                {"tokens": specs["tokens"], "positions": specs["positions"]},
+                mesh,
+            )
+            fn = jax.jit(
+                step,
+                in_shardings=(pshard, cshard, tshard["tokens"],
+                              tshard["positions"]),
+                donate_argnums=(1,),
+            )
+            args = (pstruct, cstruct, specs["tokens"], specs["positions"])
+
+        with mesh:
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        colls = rf.collective_stats(hlo)
+        coll_bytes = sum(v["bytes"] for v in colls.values())
+        flops = float(cost.get("flops", 0.0))
+        bytes_accessed = float(cost.get("bytes accessed", 0.0))
+        terms = rf.roofline(flops, bytes_accessed, coll_bytes, chips)
+        mflops = rf.model_flops(cfg, shape, shape.kind == "train")
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory=_mem_dict(mem),
+            flops_per_device=flops,
+            bytes_per_device=bytes_accessed,
+            collective_bytes_per_device=coll_bytes,
+            collectives={k: v for k, v in colls.items() if v["count"]},
+            roofline=terms,
+            model_flops_global=mflops,
+            useful_flops_ratio=(
+                round(mflops / (flops * chips), 4) if flops else None
+            ),
+            hlo_lines=hlo.count("\n"),
+        )
+    except Exception as exc:
+        rec.update(status="error", error=f"{type(exc).__name__}: {exc}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def save_record(rec: dict) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    tag = f"{rec['arch']}__{rec['shape']}__{rec['mesh'].replace('x','_')}"
+    if rec.get("variant", "baseline") != "baseline":
+        tag += f"__{rec['variant']}"
+    path = os.path.join(OUT_DIR, tag + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPE_GRID) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) cell on this mesh")
+    ap.add_argument("--chunk", type=int, default=512)
+    ap.add_argument("--variant", type=str, default="baseline")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose record file already exists")
+    args = ap.parse_args()
+
+    from repro.flags import set_variant
+    set_variant(args.variant if args.variant != "baseline" else "")
+
+    cells = []
+    if args.all:
+        for arch in list_configs():
+            for shape in SHAPE_GRID:
+                cells.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    ok = True
+    for arch, shape in cells:
+        if args.skip_existing:
+            mesh_tag = "2_16_16" if args.multi_pod else "16_16"
+            tag = f"{arch}__{shape}__{mesh_tag}"
+            if args.variant != "baseline":
+                tag += f"__{args.variant}"
+            if os.path.exists(os.path.join(OUT_DIR, tag + ".json")):
+                print(f"[cached ] {arch:22s} {shape:12s}", flush=True)
+                continue
+        rec = run_cell(arch, shape, args.multi_pod, chunk=args.chunk,
+                       variant=args.variant, mesh=mesh)
+        path = save_record(rec)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f"dominant={r['dominant']} "
+                     f"bound={r['step_lower_bound_s']:.3f}s "
+                     f"frac={r['roofline_fraction']:.2f} "
+                     f"compile={rec['compile_s']}s")
+            print(json.dumps(rec["memory"]))
+            print(json.dumps({k: v for k, v in rec["collectives"].items()}))
+        elif status == "error":
+            ok = False
+            extra = rec["error"]
+        else:
+            extra = rec["reason"][:60]
+        print(f"[{status:7s}] {arch:22s} {shape:12s} {rec['mesh']:8s} {extra}",
+              flush=True)
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh definitions.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — dryrun.py must set XLA_FLAGS before any jax
+device-count lock-in.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e-256 pod: 16x16 (data, model); two pods add a leading 'pod' axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, pods: int | None = None):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count
+    >= data*model*(pods or 1))."""
+    if pods:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,153 @@
+"""Step builders + ShapeDtypeStruct input specs shared by the dry-run,
+trainer and server.
+
+Every step is a pure function suitable for jax.jit with explicit shardings;
+nothing here allocates device memory (input_specs returns ShapeDtypeStructs,
+param/cache structures come from jax.eval_shape).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPE_GRID, ModelConfig, ShapeConfig
+from repro.models import (
+    decode_step, init_cache, init_params, prefill, train_loss,
+)
+from repro.models.model import _run_encoder  # noqa: F401  (enc-dec serving)
+from repro.optim import clip_by_global_norm
+from repro.optim.optimizers import make_optimizer
+
+__all__ = [
+    "make_train_step", "make_prefill_step", "make_serve_step",
+    "input_specs", "param_struct", "opt_struct", "serve_cache_struct",
+    "pick_optimizer", "shape_skip_reason",
+]
+
+
+def pick_optimizer(cfg: ModelConfig) -> str:
+    """Adafactor for the 100B+ class (optimizer-state HBM), AdamW otherwise."""
+    return "adafactor" if cfg.param_count() > 5e10 else "adamw"
+
+
+def make_train_step(cfg, optimizer=None, moe_dispatch=None, chunk=512):
+    from repro.flags import FLAGS
+
+    opt = optimizer or make_optimizer(pick_optimizer(cfg), 3e-4)
+    accum = int(FLAGS["accum_steps"])
+    loss_fn = functools.partial(train_loss, cfg, moe_dispatch=moe_dispatch,
+                                chunk=chunk)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            # microbatched gradient accumulation: activation live-set shrinks
+            # by `accum`x; grads accumulate in the parameter dtype, sharded
+            # exactly like the parameters (FSDP accumulators)
+            micro = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch,
+            )
+
+            def mb(carry, mbatch):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mbatch)
+                gsum = jax.tree.map(
+                    lambda a, gg: a + gg.astype(a.dtype), gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                 params)
+            (gsum, lsum), _ = jax.lax.scan(mb, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = {"loss": loss, "xent": loss}
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        updates, new_opt_state = opt.update(grads, opt_state, params)
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32))
+            .astype(p.dtype), params, updates,
+        )
+        metrics = dict(metrics, grad_norm=gnorm)
+        return new_params, new_opt_state, metrics
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg, moe_dispatch=None, chunk=512, window_only=False):
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch, moe_dispatch=moe_dispatch,
+                       chunk=chunk, window_only=window_only)
+
+    return prefill_step
+
+
+def make_serve_step(cfg, moe_dispatch=None, chunk=512):
+    def serve_step(params, cache, tokens, positions):
+        return decode_step(cfg, params, cache, tokens, positions,
+                           moe_dispatch=moe_dispatch, chunk=chunk)
+
+    return serve_step
+
+
+# ------------------------------------------------------------- shape structs
+def shape_skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
+    """Documented grid skips (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic():
+        return ("full-attention arch: 500k dense KV cache is not deployable; "
+                "run sub-quadratic archs (ssm/hybrid/swa) instead")
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this step kind."""
+    gb, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {"tokens": sd((gb, s), i32), "targets": sd((gb, s), i32)}
+        if cfg.frontend:
+            batch["frontend"] = sd((gb, cfg.frontend_len, cfg.d_model), f32)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": sd((gb, s), i32)}
+        if cfg.frontend:
+            batch["frontend"] = sd((gb, cfg.frontend_len, cfg.d_model), f32)
+        return {"batch": batch}
+    # decode: one new token against a resident cache of length s
+    return {
+        "tokens": sd((gb, 1), i32),
+        "positions": sd((gb, 1), i32),
+    }
+
+
+def param_struct(cfg, moe_dispatch=None):
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0),
+                            moe_dispatch=moe_dispatch)
+    )
+
+
+def opt_struct(cfg, opt, params_struct):
+    return jax.eval_shape(opt.init, params_struct)
+
+
+def serve_cache_struct(cfg, batch: int, max_len: int, *, window_only=False):
+    def build():
+        cache = init_cache(cfg, batch, max_len, window_only=window_only)
+        if cfg.encoder_layers:
+            f = cfg.frontend_len
+            cache["encoder"] = (
+                jnp.zeros((batch, f, cfg.d_model), jnp.dtype(cfg.dtype)),
+                jnp.zeros((batch, f), jnp.int32),
+            )
+        return cache
+
+    return jax.eval_shape(build)

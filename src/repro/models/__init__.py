@@ -1,0 +1,11 @@
+from .model import (  # noqa: F401
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    layer_windows,
+    prefill,
+    train_loss,
+    uses_scan,
+)
+from .moe import MoEDispatch, dispatch_from_plan, identity_dispatch  # noqa: F401

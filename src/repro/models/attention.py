@@ -1,0 +1,296 @@
+"""Attention: GQA / sliding-window / MLA, for train, prefill and decode.
+
+All softmax(QK^T)V paths use a CHUNKED online-softmax formulation
+(lax.scan over KV chunks, flash-attention math in pure jnp): peak memory is
+O(S * chunk) instead of O(S^2), so 32k prefill and 500k decode lower to
+compact HLO.  The Pallas kernels in repro.kernels implement the same math for
+the TPU hot path; this module is also their numerical oracle at the model
+level.
+
+Shapes: q (B, S, H, D); k/v (B, T, K, D) with H = K * G (GQA groups).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------- chunked core
+def chunked_attention(
+    q: jax.Array,               # (B, S, H, D)
+    k: jax.Array,               # (B, T, K, D)
+    v: jax.Array,               # (B, T, K, Dv)
+    q_positions: jax.Array,     # (B, S) int32 absolute positions
+    kv_positions: jax.Array,    # (B, T) int32; -1 marks invalid (empty cache)
+    causal: bool = True,
+    window: int | None = None,  # sliding-window width (tokens), None = full
+    chunk: int = 512,
+    softmax_scale: float | None = None,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks.  Returns (B, S, H, Dv)."""
+    b, s, h, d = q.shape
+    t, kheads = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // kheads
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    qg = q.reshape(b, s, kheads, g, d)
+
+    # pad T to a chunk multiple; padded slots get position -1 (masked)
+    nchunks = max(1, -(-t // chunk))
+    pad = nchunks * chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=-1)
+    kc = k.reshape(b, nchunks, chunk, kheads, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunks, chunk, kheads, dv).transpose(1, 0, 2, 3, 4)
+    pc = kv_positions.reshape(b, nchunks, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kci, vci, pci = xs  # (B, chunk, K, D), (B, chunk, K, Dv), (B, chunk)
+        s_ij = jnp.einsum(
+            "bskgd,btkd->bskgt", qg, kci, preferred_element_type=jnp.float32
+        ) * scale  # (B, S, K, G, chunk) fp32
+        valid = pci[:, None, :] >= 0  # (B, 1, chunk)
+        if causal:
+            valid &= pci[:, None, :] <= q_positions[:, :, None]
+        if window is not None:
+            valid &= pci[:, None, :] > q_positions[:, :, None] - window
+        s_ij = jnp.where(valid[:, :, None, None, :], s_ij, NEG_INF)
+        # clamp the running max so a fully-masked chunk (all NEG_INF) yields
+        # p == 0 rather than exp(0) == 1
+        m_new = jnp.maximum(jnp.maximum(m, s_ij.max(axis=-1)), -1e4)
+        p = jnp.exp(s_ij - m_new[..., None])
+        correction = jnp.exp(m - m_new)
+        l_new = l * correction + p.sum(axis=-1)
+        pv = jnp.einsum(
+            "bskgt,btkd->bskgd", p, vci.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * correction[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, s, kheads, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s, kheads, g), jnp.float32)
+    acc0 = jnp.zeros((b, s, kheads, g, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, s, h, dv).astype(q.dtype)
+
+
+# ------------------------------------------------------------------- GQA
+def init_gqa(key, cfg, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd), dtype),
+        "wk": dense_init(ks[1], (d, kv * hd), dtype),
+        "wv": dense_init(ks[2], (d, kv * hd), dtype),
+        "wo": dense_init(ks[3], (h * hd, d), dtype),
+    }
+
+
+def gqa_qkv(params, cfg, x, positions, rope: bool = True):
+    from repro.flags import FLAGS
+    from repro.parallel import constrain
+
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", x, params["wk"]).reshape(b, s, kv, hd)
+    v = jnp.einsum("bsd,de->bse", x, params["wv"]).reshape(b, s, kv, hd)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if FLAGS["sp_attn"] and s > 1:
+        # sp2: queries stay sequence-sharded; only the (GQA-small) K/V are
+        # gathered — per-layer gather drops from S*d to S*K*hd bytes
+        q = constrain(q, "q_sp")
+        k = constrain(k, "kv_rep")
+        v = constrain(v, "kv_rep")
+    return q, k, v
+
+
+def gqa_attention(
+    params, cfg, x, positions, *, window=None, causal=True,
+    kv_cache: dict | None = None, cross_kv=None, chunk=512,
+):
+    """Full GQA block.  kv_cache (decode): dict(k, v, pos, cursor) updated
+    functionally and returned.  cross_kv: precomputed (k, v, kv_positions)
+    for encoder-decoder cross-attention (no rope on q in that case)."""
+    b, s, _ = x.shape
+    if cross_kv is not None:
+        h, hd = cfg.num_heads, cfg.resolved_head_dim
+        q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(b, s, h, hd)
+        k, v, kv_pos = cross_kv
+        out = chunked_attention(q, k, v, positions, kv_pos, causal=False,
+                                chunk=chunk)
+        new_cache = None
+    elif kv_cache is None:
+        q, k, v = gqa_qkv(params, cfg, x, positions)
+        out = chunked_attention(
+            q, k, v, positions, positions, causal=causal, window=window,
+            chunk=chunk,
+        )
+        new_cache = None
+    else:
+        q, k, v = gqa_qkv(params, cfg, x, positions)
+        ck, cv, cpos, cursor = (
+            kv_cache["k"], kv_cache["v"], kv_cache["pos"], kv_cache["cursor"],
+        )
+        t_max = ck.shape[1]
+        # ring-buffer write (windowed caches wrap; full caches never do)
+        idx = cursor % t_max
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, idx, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cpos, positions.astype(cpos.dtype), (0, idx)
+        )
+        out = chunked_attention(q, ck, cv, positions, cpos, causal=True,
+                                window=window, chunk=chunk)
+        new_cache = dict(k=ck, v=cv, pos=cpos, cursor=cursor + s)
+    y = out.reshape(b, s, -1)
+    return jnp.einsum("bse,ed->bsd", y, params["wo"]), new_cache
+
+
+def init_gqa_cache(cfg, batch, max_len, dtype, window=None) -> dict:
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    t = min(max_len, window) if window else max_len
+    return dict(
+        k=jnp.zeros((batch, t, kv, hd), dtype),
+        v=jnp.zeros((batch, t, kv, hd), dtype),
+        pos=jnp.full((batch, t), -1, jnp.int32),
+        cursor=jnp.zeros((), jnp.int32),
+    )
+
+
+# ------------------------------------------------------------------- MLA
+def init_mla(key, cfg, dtype) -> dict:
+    m, d, h = cfg.mla, cfg.d_model, cfg.num_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": {"scale": jnp.ones((m.q_lora_rank,), dtype)},
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, h * qk_hd), dtype),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "kv_norm": {"scale": jnp.ones((m.kv_lora_rank,), dtype)},
+        "wk_b": dense_init(ks[3], (m.kv_lora_rank, h * m.qk_nope_head_dim), dtype),
+        "wv_b": dense_init(ks[4], (m.kv_lora_rank, h * m.v_head_dim), dtype),
+        "wo": dense_init(ks[5], (h * m.v_head_dim, d), dtype),
+    }
+
+
+def _mla_q(params, cfg, x, positions):
+    from .layers import apply_norm
+    m, h = cfg.mla, cfg.num_heads
+    b, s, _ = x.shape
+    cq = apply_norm("rmsnorm", params["q_norm"],
+                    jnp.einsum("bsd,dr->bsr", x, params["wq_a"]))
+    q = jnp.einsum("bsr,re->bse", cq, params["wq_b"]).reshape(
+        b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim
+    )
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(params, cfg, x, positions):
+    from .layers import apply_norm
+    m = cfg.mla
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_kv = apply_norm("rmsnorm", params["kv_norm"], kv[..., : m.kv_lora_rank])
+    k_rope = kv[..., m.kv_lora_rank:][:, :, None, :]  # (B,S,1,rope_d) shared
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(params, cfg, x, positions, *, kv_cache=None, chunk=512):
+    """MLA in two formulations:
+
+    * ABSORBED (decode, always; train/prefill by default): attention runs in
+      latent space against the compressed cache (c_kv, k_rope) — never
+      decompressing per-head K/V.  Ideal for long-KV decode; for s>1 the
+      (B,S,H,kv_lora) query/accumulator tensors are large.
+    * DECOMPRESSED (train/prefill with flags.FLAGS['mla_decomp']): per-head
+      K/V materialized per chunk — deepseek's own training-time choice; the
+      §Perf hillclimb measures the memory-term delta.
+
+    score(h) = q_nope(h)^T W_kb(h) c_kv / sqrt(D) + q_rope^T k_rope / sqrt(D)
+    out(h)   = [softmax @ c_kv] W_vb(h)
+    """
+    from repro.flags import FLAGS
+
+    m, h = cfg.mla, cfg.num_heads
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    c_kv_new, k_rope_new = _mla_ckv(params, cfg, x, positions)
+    if kv_cache is None:
+        c_kv, k_rope, kv_pos = c_kv_new, k_rope_new, positions
+        new_cache = None
+    else:
+        cursor = kv_cache["cursor"]
+        c_kv = jax.lax.dynamic_update_slice(
+            kv_cache["c_kv"], c_kv_new.astype(kv_cache["c_kv"].dtype),
+            (0, cursor, 0))
+        k_rope = jax.lax.dynamic_update_slice(
+            kv_cache["k_rope"], k_rope_new.astype(kv_cache["k_rope"].dtype),
+            (0, cursor, 0))
+        kv_pos = jax.lax.dynamic_update_slice(
+            kv_cache["pos"], positions.astype(jnp.int32), (0, cursor))
+        new_cache = dict(c_kv=c_kv, k_rope=k_rope, pos=kv_pos,
+                         cursor=cursor + s)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+
+    if FLAGS["mla_decomp"] and s > 1:
+        # decompressed path: per-head K/V from the latent cache
+        wkb = params["wk_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+        wvb = params["wv_b"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+        t = c_kv.shape[1]
+        k_nope = jnp.einsum("btr,rhd->bthd", c_kv, wkb)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, t, h, m.qk_rope_head_dim))], -1)
+        v_full = jnp.einsum("btr,rhv->bthv", c_kv, wvb)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = chunked_attention(
+            q_full, k_full.astype(q_full.dtype), v_full.astype(q_full.dtype),
+            positions, kv_pos, causal=True, chunk=chunk, softmax_scale=scale,
+        ).reshape(b, s, -1)
+        return (jnp.einsum("bse,ed->bsd", out.astype(x.dtype), params["wo"]),
+                new_cache)
+
+    # absorbed path: q_lat (B,S,H,R)
+    wkb = params["wk_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wkb)
+    # attention in latent space: keys = [c_kv ; k_rope], queries = [q_lat ; q_rope]
+    qq = jnp.concatenate([q_lat, jnp.broadcast_to(
+        q_rope[:, :, :, :], (b, s, h, m.qk_rope_head_dim))], axis=-1)
+    kk = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]  # (B,T,1,R+rd)
+    lat = chunked_attention(
+        qq, kk, c_kv[:, :, None, :], positions, kv_pos, causal=True,
+        chunk=chunk, softmax_scale=scale,
+    )  # (B,S,H,R) — attention-weighted latent
+    wvb = params["wv_b"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bshr,rhv->bshv", lat, wvb).reshape(b, s, -1)
+    return jnp.einsum("bse,ed->bsd", out.astype(x.dtype), params["wo"]), new_cache
+
+
+def init_mla_cache(cfg, batch, max_len, dtype) -> dict:
+    m = cfg.mla
+    return dict(
+        c_kv=jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        pos=jnp.full((batch, max_len), -1, jnp.int32),
+        cursor=jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,164 @@
+"""Transformer / SSM / hybrid blocks: init + apply for one layer.
+
+A block is family-polymorphic:
+  dense/moe/vlm : pre-norm attn (GQA or MLA) -> residual -> pre-norm FFN/MoE
+  ssm (mamba2)  : pre-norm mamba2 -> residual (no FFN)
+  hybrid (hymba): pre-norm -> attn AND mamba2 in PARALLEL on the same input,
+                  per-path RMS-normalized then averaged -> residual -> FFN
+  encoder       : non-causal self-attn -> FFN
+  cross-decoder : causal self-attn -> cross-attn -> FFN (seamless)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import apply_mlp, apply_norm, init_mlp, init_norm
+
+__all__ = ["init_block", "apply_block", "init_block_cache"]
+
+
+def _has_attn(cfg) -> bool:
+    return cfg.attention != "none"
+
+
+def _has_ssm(cfg) -> bool:
+    return cfg.attention in ("none", "hybrid")
+
+
+def _is_moe_layer(cfg, layer_idx: int) -> bool:
+    return cfg.moe is not None and layer_idx >= cfg.moe.first_k_dense
+
+
+def init_block(
+    key, cfg, dtype, *, layer_idx: int = 0, cross_attention: bool = False,
+    moe_dispatch=None, force_dense: bool = False,
+) -> dict:
+    ks = jax.random.split(key, 8)
+    p: dict = {}
+    d = cfg.d_model
+    if _has_attn(cfg):
+        p["ln_attn"] = init_norm(cfg.norm, d, dtype)
+        if cfg.attention == "mla":
+            p["attn"] = attn.init_mla(ks[0], cfg, dtype)
+        else:
+            p["attn"] = attn.init_gqa(ks[0], cfg, dtype)
+    if _has_ssm(cfg):
+        p["ln_ssm"] = init_norm(cfg.norm, d, dtype)
+        p["ssm"] = ssm_mod.init_mamba2(ks[1], cfg, dtype)
+    if cfg.attention == "hybrid":
+        # per-path output norms before averaging (hymba)
+        p["out_norm_attn"] = {"scale": jnp.ones((d,), dtype)}
+        p["out_norm_ssm"] = {"scale": jnp.ones((d,), dtype)}
+    if cross_attention:
+        p["ln_cross"] = init_norm(cfg.norm, d, dtype)
+        p["cross"] = attn.init_gqa(ks[2], cfg, dtype)
+    if cfg.d_ff and cfg.attention != "none":
+        p["ln_mlp"] = init_norm(cfg.norm, d, dtype)
+        if _is_moe_layer(cfg, layer_idx) and not force_dense:
+            p["moe"] = moe_mod.init_moe(ks[3], cfg, dtype, moe_dispatch)
+        else:
+            p["mlp"] = init_mlp(ks[3], cfg.mlp, d, cfg.d_ff, dtype)
+    return p
+
+
+def apply_block(
+    params: dict,
+    cfg,
+    x: jax.Array,                 # (B, S, d)
+    positions: jax.Array,         # (B, S)
+    *,
+    layer_idx: int = 0,
+    causal: bool = True,
+    window=None,                  # None | int | traced scalar
+    cache: dict | None = None,    # per-layer cache dict
+    cross_kv=None,                # (k, v, pos) for enc-dec decoders
+    moe_dispatch=None,
+    is_moe: bool | None = None,
+    chunk: int = 512,
+):
+    """Returns (y, new_cache, aux)."""
+    aux = {}
+    new_cache: dict = {}
+    if _has_attn(cfg) and cfg.attention != "hybrid":
+        h = apply_norm(cfg.norm, params["ln_attn"], x)
+        if cfg.attention == "mla":
+            a_out, c = attn.mla_attention(
+                params["attn"], cfg, h, positions,
+                kv_cache=cache.get("attn") if cache else None, chunk=chunk,
+            )
+        else:
+            a_out, c = attn.gqa_attention(
+                params["attn"], cfg, h, positions, window=window,
+                causal=causal,
+                kv_cache=cache.get("attn") if cache else None, chunk=chunk,
+            )
+        if c is not None:
+            new_cache["attn"] = c
+        x = x + a_out
+    elif cfg.attention == "hybrid":
+        h = apply_norm(cfg.norm, params["ln_attn"], x)
+        a_out, c_attn = attn.gqa_attention(
+            params["attn"], cfg, h, positions, window=window, causal=causal,
+            kv_cache=cache.get("attn") if cache else None, chunk=chunk,
+        )
+        s_out, c_ssm = ssm_mod.apply_mamba2(
+            params["ssm"], cfg, h,
+            cache=cache.get("ssm") if cache else None,
+        )
+        # hymba: average of per-path normalized outputs
+        a_n = apply_norm("rmsnorm", params["out_norm_attn"], a_out)
+        s_n = apply_norm("rmsnorm", params["out_norm_ssm"], s_out)
+        x = x + 0.5 * (a_n + s_n)
+        if c_attn is not None:
+            new_cache["attn"] = c_attn
+        if c_ssm is not None:
+            new_cache["ssm"] = c_ssm
+    else:  # pure SSM (mamba2)
+        h = apply_norm(cfg.norm, params["ln_ssm"], x)
+        s_out, c_ssm = ssm_mod.apply_mamba2(
+            params["ssm"], cfg, h, cache=cache.get("ssm") if cache else None,
+        )
+        if c_ssm is not None:
+            new_cache["ssm"] = c_ssm
+        return x + s_out, (new_cache or None), aux
+
+    if cross_kv is not None:
+        h = apply_norm(cfg.norm, params["ln_cross"], x)
+        c_out, _ = attn.gqa_attention(
+            params["cross"], cfg, h, positions, cross_kv=cross_kv, chunk=chunk,
+        )
+        x = x + c_out
+
+    if "moe" in params or "mlp" in params:
+        h = apply_norm(cfg.norm, params["ln_mlp"], x)
+        use_moe = is_moe if is_moe is not None else ("moe" in params)
+        if use_moe:
+            m_out, moe_aux = moe_mod.apply_moe(
+                params["moe"], cfg, h, moe_dispatch
+            )
+            aux.update(moe_aux)
+        else:
+            m_out = apply_mlp(cfg.mlp, params["mlp"], h)
+        x = x + m_out
+    return x, (new_cache or None), aux
+
+
+def init_block_cache(
+    cfg, batch: int, max_len: int, dtype, *, window=None,
+    cross_attention: bool = False,
+) -> dict:
+    c: dict = {}
+    if _has_attn(cfg):
+        if cfg.attention == "mla":
+            c["attn"] = attn.init_mla_cache(cfg, batch, max_len, dtype)
+        else:
+            c["attn"] = attn.init_gqa_cache(cfg, batch, max_len, dtype,
+                                            window=window)
+    if _has_ssm(cfg):
+        c["ssm"] = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+    return c

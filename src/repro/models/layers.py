@@ -1,0 +1,119 @@
+"""Shared layer primitives: norms, MLPs, embeddings, RoPE.
+
+Pure-functional JAX: parameters are nested dicts of arrays, every layer is an
+(init, apply) pair.  Norm/softmax math runs in fp32 regardless of activation
+dtype (bf16 on TPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Initializer = jax.nn.initializers.Initializer
+
+
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    """Truncated-normal fan-in init (maxtext-style)."""
+    fan_in = shape[0] if len(shape) > 1 else 1
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# ------------------------------------------------------------------- norms
+def init_norm(kind: str, d: int, dtype) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if kind == "nonparametric_ln":
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, params: dict, x: jax.Array, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    # layernorm family: center + scale
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+            jnp.float32
+        )
+    # nonparametric_ln (olmo): no affine parameters
+    return y.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- MLPs
+def init_mlp(key, kind: str, d: int, ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "wi_gate": dense_init(ks[0], (d, ff), dtype),
+            "wi_up": dense_init(ks[1], (d, ff), dtype),
+            "wo": dense_init(ks[2], (ff, d), dtype),
+        }
+    # non-gated: squared_relu (nemotron) / gelu (seamless)
+    return {
+        "wi": dense_init(ks[0], (d, ff), dtype),
+        "wo": dense_init(ks[1], (ff, d), dtype),
+    }
+
+
+def apply_mlp(kind: str, params: dict, x: jax.Array) -> jax.Array:
+    if kind == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["wi_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["wi_up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, params["wi"])
+        if kind == "squared_relu":
+            h = jnp.square(jax.nn.relu(h))
+        elif kind == "gelu":
+            h = jax.nn.gelu(h)
+        else:
+            raise ValueError(kind)
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+# -------------------------------------------------------------- embeddings
+def init_embed(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": dense_init(key, (vocab, d), dtype, scale=1.0)}
+
+
+def embed_lookup(params: dict, ids: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def unembed(params: dict, x: jax.Array) -> jax.Array:
+    """Logits in fp32 (stable loss)."""
+    return jnp.einsum(
+        "...d,vd->...v", x.astype(jnp.float32),
+        params["table"].astype(jnp.float32),
+    )
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    """positions: (...,) int -> cos/sin of shape (..., head_dim//2), fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    half = x.shape[-1] // 2
+    cos, sin = rope_angles(positions, x.shape[-1], theta)  # (..., seq, half)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,384 @@
+"""Full model assembly: init, forward, train loss, prefill, decode.
+
+Layer iteration modes:
+  * scan (default): per-layer params stacked on a leading axis, lax.scan with
+    optional remat — compact HLO even for 61-layer models.
+  * unrolled: per-layer python loop (used by hymba, whose global-attention
+    layers carry full-length caches while SWA layers carry ring buffers).
+
+Cache layout: {"layers": <stacked or list of block caches>,
+               "encoder": (enc_hidden, enc_pos) | None}   (enc-dec serving
+reuses the encoder states computed at prefill instead of re-running the
+encoder every decode step.)
+
+Steps exposed to the launcher:
+  * train_loss(cfg, params, batch)                    (train_4k)
+  * prefill(cfg, params, batch)   -> logits, cache    (prefill_32k)
+  * decode_step(cfg, params, cache, tokens, positions) (decode_*, long_*)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import constrain
+
+from . import blocks
+from .layers import apply_norm, embed_lookup, init_embed, init_norm, unembed
+
+__all__ = [
+    "init_params", "forward", "train_loss", "prefill", "decode_step",
+    "init_cache", "layer_windows", "uses_scan",
+]
+
+
+# ---------------------------------------------------------------- structure
+HUGE_WINDOW = 1 << 30
+
+
+def uses_scan(cfg) -> bool:
+    """Hymba mixes cache SHAPES across layers (full vs ring KV), so its
+    cached (serving) path unrolls; every cache-free path scans (per-layer
+    SWA windows ride along as traced scan inputs).  Parameters are always
+    stored layer-stacked."""
+    return cfg.attention != "hybrid"
+
+
+def layer_windows(cfg) -> list:
+    """Per-layer attention window (None = full attention)."""
+    out = []
+    for i in range(cfg.num_layers):
+        if cfg.attention == "hybrid" and cfg.global_attn_every:
+            is_global = (i % cfg.global_attn_every == 0) or (i == cfg.num_layers - 1)
+            out.append(None if is_global else cfg.sliding_window)
+        else:
+            out.append(cfg.sliding_window)
+    return out
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------- init
+def init_params(cfg, key, moe_dispatch=None) -> dict:
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    p: dict = {"embed": init_embed(keys[0], cfg.vocab_size, cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = init_embed(keys[1], cfg.vocab_size, cfg.d_model, dtype)
+    p["final_norm"] = init_norm(cfg.norm, cfg.d_model, dtype)
+    cross = cfg.encoder_layers > 0
+
+    kd = cfg.moe.first_k_dense if cfg.moe else 0
+    if kd:
+        p["dense_blocks"] = jax.vmap(
+            lambda k: blocks.init_block(
+                k, cfg, dtype, layer_idx=0, cross_attention=cross,
+                force_dense=True)
+        )(jax.random.split(keys[2], kd))
+    p["blocks"] = jax.vmap(
+        lambda k: blocks.init_block(
+            k, cfg, dtype, layer_idx=kd, cross_attention=cross,
+            moe_dispatch=moe_dispatch)
+    )(jax.random.split(keys[3], cfg.num_layers - kd))
+    if cfg.encoder_layers:
+        p["enc_blocks"] = jax.vmap(
+            lambda k: blocks.init_block(k, cfg, dtype, layer_idx=0)
+        )(jax.random.split(keys[4], cfg.encoder_layers))
+        p["enc_final_norm"] = init_norm(cfg.norm, cfg.d_model, dtype)
+    if cfg.frontend:
+        from .layers import dense_init
+        p["frontend_proj"] = dense_init(keys[5], (cfg.d_model, cfg.d_model),
+                                        dtype)
+    if cfg.mtp_depth:
+        from .layers import dense_init
+        p["mtp"] = {
+            "proj": dense_init(keys[6], (2 * cfg.d_model, cfg.d_model), dtype),
+            "block": blocks.init_block(keys[7], cfg, dtype, layer_idx=0,
+                                       force_dense=True),
+            "norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        }
+    return p
+
+
+# ------------------------------------------------------------------- caches
+def init_cache(cfg, batch: int, max_len: int, *, window_only: bool = False):
+    """window_only=True sizes SWA-layer caches at the window width
+    (long-context serving: ring buffers instead of 500k dense caches)."""
+    dtype = _dtype(cfg)
+    wins = layer_windows(cfg)
+    if uses_scan(cfg):
+        w = wins[0]
+        one = blocks.init_block_cache(
+            cfg, batch, max_len, dtype,
+            window=(w if (window_only and w) else None),
+        )
+        layers = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x[None], (cfg.num_layers,) + x.shape).copy(),
+            one,
+        )
+    else:
+        layers = [
+            blocks.init_block_cache(
+                cfg, batch, max_len, dtype,
+                window=(wins[i] if (window_only and wins[i]) else None),
+            )
+            for i in range(cfg.num_layers)
+        ]
+    return {"layers": layers, "encoder": None}
+
+
+# ------------------------------------------------------------------ forward
+def _embed_inputs(cfg, params, tokens, frontend_embeds):
+    x = embed_lookup(params["embed"], tokens)
+    if cfg.frontend == "vision_patches" and frontend_embeds is not None:
+        # VLM stub: visual tokens replace the first F decoder positions
+        f = frontend_embeds.shape[1]
+        vis = jnp.einsum("bfd,de->bfe", frontend_embeds, params["frontend_proj"])
+        x = jnp.concatenate([vis.astype(x.dtype), x[:, f:]], axis=1)
+    return x
+
+
+def _run_encoder(cfg, params, frontend_embeds):
+    """Seamless audio stub: frame embeddings -> encoder stack."""
+    x = jnp.einsum("bfd,de->bfe", frontend_embeds, params["frontend_proj"])
+    x = x.astype(_dtype(cfg))
+    pos = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2]
+    )
+
+    def body(h, layer_params):
+        h, _, _ = blocks.apply_block(layer_params, cfg, h, pos, causal=False)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    x = apply_norm(cfg.norm, params["enc_final_norm"], x)
+    return x, pos
+
+
+def _cross_kv_from(cfg, layer_params, enc_states):
+    enc_h, enc_pos = enc_states
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    b, f, _ = enc_h.shape
+    k = jnp.einsum("bfd,de->bfe", enc_h,
+                   layer_params["cross"]["wk"]).reshape(b, f, kv, hd)
+    v = jnp.einsum("bfd,de->bfe", enc_h,
+                   layer_params["cross"]["wv"]).reshape(b, f, kv, hd)
+    return (k, v, enc_pos)
+
+
+def _decoder_stack(
+    cfg, params, x, positions, *, layer_caches=None, enc_states=None,
+    moe_dispatch=None, remat=False, chunk=512,
+):
+    """Returns (hidden, new_layer_caches, aux_sums)."""
+    wins = layer_windows(cfg)
+    zero_aux = {"lb_loss": jnp.zeros((), jnp.float32),
+                "z_loss": jnp.zeros((), jnp.float32)}
+
+    def one_layer(h, aux, layer_params, layer_cache, window):
+        cross_kv = None
+        if enc_states is not None and "cross" in layer_params:
+            cross_kv = _cross_kv_from(cfg, layer_params, enc_states)
+        h, new_c, a = blocks.apply_block(
+            layer_params, cfg, h, positions, window=window,
+            cache=layer_cache, cross_kv=cross_kv, moe_dispatch=moe_dispatch,
+            chunk=chunk,
+        )
+        # keep activations batch-DP-sharded across layers: without this pin,
+        # GSPMD may gather the batch to exploit weight shardings (measured
+        # multi-GB all-gathers on the production mesh)
+        h = constrain(h, "act")
+        aux = {k: aux[k] + a[k].astype(jnp.float32) if k in a else aux[k]
+               for k in aux}
+        return h, aux, new_c
+
+    if uses_scan(cfg) or layer_caches is None:
+        # mixed per-layer windows (hymba) ride along as a traced scan input;
+        # HUGE_WINDOW disables the window mask numerically
+        mixed_windows = len(set(wins)) > 1
+        window_arr = jnp.asarray(
+            [w if w is not None else HUGE_WINDOW for w in wins], jnp.int32
+        )
+        kd = cfg.moe.first_k_dense if cfg.moe else 0
+        groups = ([("dense_blocks", kd)] if kd else []) + [
+            ("blocks", cfg.num_layers - kd)
+        ]
+
+        h, aux = x, zero_aux
+        new_caches, offset = [], 0
+        for gname, glen in groups:
+            gparams = params[gname]
+            gwin = window_arr[offset : offset + glen]
+            static_window = None if mixed_windows else wins[0]
+            if layer_caches is not None:
+                gcache = jax.tree.map(
+                    lambda c, off=offset, n=glen: c[off : off + n], layer_caches
+                )
+
+                def body_c(carry, xs):
+                    h, aux = carry
+                    lp, lc, w = xs
+                    h, aux, new_c = one_layer(
+                        h, aux, lp, lc,
+                        w if mixed_windows else static_window)
+                    return (h, aux), new_c
+
+                (h, aux), upd = jax.lax.scan(body_c, (h, aux),
+                                             (gparams, gcache, gwin))
+                new_caches.append(upd)
+            else:
+
+                def body_nc(carry, xs):
+                    h, aux = carry
+                    lp, w = xs
+                    h, aux, _ = one_layer(
+                        h, aux, lp, None,
+                        w if mixed_windows else static_window)
+                    return (h, aux), None
+
+                fn = body_nc
+                if remat:
+                    fn = jax.checkpoint(
+                        body_nc,
+                        policy=jax.checkpoint_policies.nothing_saveable,
+                    )
+                (h, aux), _ = jax.lax.scan(fn, (h, aux), (gparams, gwin))
+            offset += glen
+        if layer_caches is not None:
+            new_layer_caches = (
+                jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                             *new_caches)
+                if len(new_caches) > 1 else new_caches[0]
+            )
+        else:
+            new_layer_caches = None
+        return h, new_layer_caches, aux
+
+    # ---- unrolled serving path (hymba: per-layer cache shapes differ)
+    h, aux = x, zero_aux
+    new_list = []
+    for i in range(cfg.num_layers):
+        layer_params = jax.tree.map(lambda v: v[i], params["blocks"])
+        lc = layer_caches[i]
+        h, aux, new_c = one_layer(h, aux, layer_params, lc, wins[i])
+        new_list.append(new_c)
+    return h, new_list, aux
+
+
+def forward(
+    cfg, params, tokens, *, positions=None, frontend_embeds=None,
+    cache=None, moe_dispatch=None, remat=False, chunk=512,
+):
+    """Returns (logits_fp32, new_cache, aux, hidden)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+    enc_states = None
+    if cfg.encoder_layers:
+        if cache is not None and cache.get("encoder") is not None:
+            enc_states = cache["encoder"]
+        elif frontend_embeds is not None:
+            enc_states = _run_encoder(cfg, params, frontend_embeds)
+        else:
+            raise ValueError("encoder-decoder model needs frontend_embeds "
+                             "or cached encoder states")
+        x = embed_lookup(params["embed"], tokens)
+    else:
+        x = _embed_inputs(cfg, params, tokens, frontend_embeds)
+    x = constrain(x, "act")
+    layer_caches = cache["layers"] if cache is not None else None
+    h, new_layer_caches, aux = _decoder_stack(
+        cfg, params, x, positions, layer_caches=layer_caches,
+        enc_states=enc_states, moe_dispatch=moe_dispatch, remat=remat,
+        chunk=chunk,
+    )
+    h = apply_norm(cfg.norm, params["final_norm"], h)
+    emb = params["unembed"] if "unembed" in params else params["embed"]
+    logits = constrain(unembed(emb, h), "logits")
+    new_cache = None
+    if cache is not None:
+        new_cache = {"layers": new_layer_caches, "encoder": enc_states}
+    return logits, new_cache, aux, h
+
+
+# -------------------------------------------------------------------- steps
+def softmax_xent(logits, targets, mask=None):
+    """One-hot-einsum cross entropy: unlike take_along_axis, the label pick
+    partitions cleanly when the vocab dim is TP-sharded (no (B,S,V)
+    all-gather; GSPMD reduces the partial picks with a (B,S) all-reduce)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    picked = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - picked
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def train_loss(cfg, params, batch, *, moe_dispatch=None, chunk=512):
+    """batch: tokens (B,S), targets (B,S), optional frontend (B,F,d)."""
+    logits, _, aux, h = forward(
+        cfg, params, batch["tokens"],
+        frontend_embeds=batch.get("frontend"),
+        moe_dispatch=moe_dispatch, remat=True, chunk=chunk,
+    )
+    loss = softmax_xent(logits, batch["targets"], batch.get("mask"))
+    metrics = {"xent": loss}
+    if cfg.moe:
+        loss = loss + 0.01 * aux["lb_loss"] + 1e-4 * aux["z_loss"]
+        metrics.update(lb_loss=aux["lb_loss"], z_loss=aux["z_loss"])
+    if cfg.mtp_depth and "mtp" in params:
+        # deepseek MTP: one extra block predicts t+2 from [h_t ; emb(y_{t+1})]
+        emb_next = embed_lookup(params["embed"], batch["targets"])
+        mtp_in = jnp.einsum(
+            "bse,ed->bsd",
+            jnp.concatenate([h, emb_next.astype(h.dtype)], axis=-1),
+            params["mtp"]["proj"],
+        )
+        pos = jnp.broadcast_to(
+            jnp.arange(mtp_in.shape[1], dtype=jnp.int32)[None],
+            mtp_in.shape[:2],
+        )
+        mh, _, _ = blocks.apply_block(params["mtp"]["block"], cfg, mtp_in, pos,
+                                      chunk=chunk)
+        mh = apply_norm(cfg.norm, params["mtp"]["norm"], mh)
+        emb = params["unembed"] if "unembed" in params else params["embed"]
+        mtp_logits = unembed(emb, mh[:, :-1])
+        mtp_loss = softmax_xent(mtp_logits, batch["targets"][:, 1:])
+        loss = loss + 0.3 * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def prefill(cfg, params, batch, *, max_len=None, moe_dispatch=None, chunk=512,
+            window_only=False):
+    """Run the full prompt, building the serving cache.  Returns
+    (last_token_logits, cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len or s, window_only=window_only)
+    if cfg.encoder_layers:
+        cache["encoder"] = _run_encoder(cfg, params, batch["frontend"])
+    logits, cache, _, _ = forward(
+        cfg, params, tokens, cache=cache,
+        frontend_embeds=batch.get("frontend"),
+        moe_dispatch=moe_dispatch, chunk=chunk,
+    )
+    return logits[:, -1], cache
+
+
+def decode_step(cfg, params, cache, tokens, positions, *, moe_dispatch=None,
+                chunk=512):
+    """One serving step: tokens (B,1) at `positions` (B,1).  Returns
+    (logits (B,V), new_cache)."""
+    logits, new_cache, _, _ = forward(
+        cfg, params, tokens, positions=positions, cache=cache,
+        moe_dispatch=moe_dispatch, chunk=chunk,
+    )
+    return logits[:, -1], new_cache

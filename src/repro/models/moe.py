@@ -1,0 +1,360 @@
+"""Mixture-of-Experts block with workload-driven expert placement.
+
+Routing: top-k softmax router (+ optional shared experts, deepseek-style).
+Dispatch: sort-based ragged dispatch into per-SLOT capacity buffers — no
+(tokens, E, C) one-hot materialization, so 1M-token steps lower to compact
+HLO.  The slot buffer (num_slots, C, d) is sharded over the `model` mesh
+axis (expert parallelism); GSPMD inserts the token all-to-all.
+
+THE PAPER'S TECHNIQUE lives in the expert->slot mapping: `slot_of` is a
+(num_experts, num_ranks) replica-selection table produced by
+repro.core.expert_placement (LMBR/PRA over a routing trace).  Hot or
+co-firing experts occupy multiple slots; each token group selects the
+replica that minimizes the EP ranks it must reach (greedy set cover on the
+placement).  With the identity placement (slots == experts, no replicas)
+this reduces to standard EP.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel import constrain
+
+from .layers import dense_init
+
+__all__ = ["init_moe", "apply_moe", "identity_dispatch", "MoEDispatch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDispatch:
+    """Device-side expert->slot routing tables (from the placement engine).
+
+    slot_of[e, r]: the slot id a token originating on EP rank r should use
+    for expert e (replica selection baked into a lookup).  num_slots >=
+    num_experts; slot s on rank s // slots_per_rank.
+    """
+
+    num_slots: int
+    num_ranks: int
+    slot_of: np.ndarray          # (num_experts, num_ranks) int32
+    slot_to_expert: np.ndarray   # (num_slots,) int32 (for weight gathering)
+
+    @property
+    def slots_per_rank(self) -> int:
+        return self.num_slots // self.num_ranks
+
+
+def identity_dispatch(num_experts: int, num_ranks: int = 1) -> MoEDispatch:
+    slot_of = np.tile(np.arange(num_experts, dtype=np.int32)[:, None],
+                      (1, num_ranks))
+    return MoEDispatch(num_experts, num_ranks, slot_of,
+                       np.arange(num_experts, dtype=np.int32))
+
+
+def dispatch_from_plan(plan) -> MoEDispatch:
+    """Build device tables from a repro.core ExpertPlacementPlan."""
+    num_slots = plan.num_ranks * plan.slots_per_rank
+    slot_to_expert = np.full((num_slots,), 0, dtype=np.int32)
+    for r in range(plan.num_ranks):
+        for s in range(plan.slots_per_rank):
+            e = plan.slot_to_expert[r, s]
+            slot_to_expert[r * plan.slots_per_rank + s] = max(int(e), 0)
+    slot_of = np.zeros((plan.num_experts, plan.num_ranks), dtype=np.int32)
+    for e in range(plan.num_experts):
+        ranks = np.flatnonzero(plan.expert_slot_table[e] >= 0)
+        for r in range(plan.num_ranks):
+            # replica selection: prefer a copy on the token's own rank, else
+            # the first (deterministic) replica — the greedy-cover choice for
+            # a single-expert read
+            src = r if r in set(ranks.tolist()) else int(ranks[0])
+            slot_of[e, r] = src * plan.slots_per_rank + int(
+                plan.expert_slot_table[e, src]
+            )
+    return MoEDispatch(num_slots, plan.num_ranks, slot_of, slot_to_expert)
+
+
+def init_moe(key, cfg, dtype, dispatch: MoEDispatch | None = None) -> dict:
+    """Expert weights are stored SLOT-major (replicated experts share values
+    via slot_to_expert gather at init / checkpoint load)."""
+    m = cfg.moe
+    d = cfg.d_model
+    dispatch = dispatch or identity_dispatch(m.num_experts)
+    ks = jax.random.split(key, 5)
+    n_slots = dispatch.num_slots
+    # init per-EXPERT then gather to slots so replicas start identical
+    we_gate = dense_init(ks[0], (m.num_experts, d, m.d_ff_expert), dtype)
+    we_up = dense_init(ks[1], (m.num_experts, d, m.d_ff_expert), dtype)
+    we_down = dense_init(ks[2], (m.num_experts, m.d_ff_expert, d), dtype)
+    s2e = jnp.asarray(dispatch.slot_to_expert)
+    params = {
+        "router": dense_init(ks[3], (d, m.num_experts), jnp.float32),
+        "we_gate": we_gate[s2e] if n_slots != m.num_experts else we_gate,
+        "we_up": we_up[s2e] if n_slots != m.num_experts else we_up,
+        "we_down": we_down[s2e] if n_slots != m.num_experts else we_down,
+    }
+    if m.num_shared_experts:
+        ff_sh = m.d_ff_expert * m.num_shared_experts
+        params["shared"] = {
+            "wi_gate": dense_init(ks[4], (d, ff_sh), dtype),
+            "wi_up": dense_init(jax.random.fold_in(ks[4], 1), (d, ff_sh), dtype),
+            "wo": dense_init(jax.random.fold_in(ks[4], 2), (ff_sh, d), dtype),
+        }
+    return params
+
+
+def apply_moe(
+    params: dict,
+    cfg,
+    x: jax.Array,                 # (B, S, d)
+    dispatch: MoEDispatch | None = None,
+    capacity_factor: float | None = None,
+):
+    """Returns (y, aux) with aux = load-balancing loss terms.
+
+    Two implementations:
+      * distributed (active mesh with model-axis > 1): explicit shard_map
+        all-to-all dispatch — the production EP pattern.  GSPMD's automatic
+        partitioning of the scatter/gather formulation was measured to
+        produce TB-scale all-reduces on deepseek-v3 train_4k (EXPERIMENTS.md
+        §Perf), so the collective schedule is written by hand here.
+      * local (tests / single device): sort-based ragged dispatch below.
+    """
+    from repro.parallel import active_mesh
+
+    mesh = active_mesh()
+    if mesh is not None and mesh.shape.get("model", 1) > 1:
+        return _apply_moe_shard_map(params, cfg, x, dispatch, mesh,
+                                    capacity_factor)
+
+    from repro.flags import FLAGS
+
+    m = cfg.moe
+    dispatch = dispatch or identity_dispatch(m.num_experts)
+    b, s, d = x.shape
+    n = b * s
+    k = m.top_k
+    cf = capacity_factor or FLAGS["moe_cf"] or m.capacity_factor
+    n_slots = dispatch.num_slots
+    xf = x.reshape(n, d)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)            # (n, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- paper technique: expert id -> slot id via replica-selection table.
+    # token's EP rank = its position among the model-axis shards
+    tokens_per_rank = max(1, n // dispatch.num_ranks)
+    src_rank = jnp.minimum(
+        jnp.arange(n, dtype=jnp.int32) // tokens_per_rank,
+        dispatch.num_ranks - 1,
+    )
+    slot_of = jnp.asarray(dispatch.slot_of)           # (E, R)
+    top_slot = slot_of[top_e, src_rank[:, None]]      # (n, k)
+
+    # ---- sort-based ragged dispatch to per-slot capacity buffers
+    capacity = int(max(8, np.ceil(n * k / n_slots * cf)))
+    flat_slot = top_slot.reshape(-1)                  # (n*k,)
+    sort_idx = jnp.argsort(flat_slot)
+    sorted_slot = flat_slot[sort_idx]
+    token_idx = sort_idx // k
+    seg_start = jnp.searchsorted(sorted_slot, jnp.arange(n_slots))
+    pos_in_slot = jnp.arange(n * k) - seg_start[sorted_slot]
+    keep = pos_in_slot < capacity
+    pos_in_slot = jnp.where(keep, pos_in_slot, 0)
+
+    buf = jnp.zeros((n_slots, capacity, d), x.dtype)
+    buf = buf.at[sorted_slot, pos_in_slot].add(
+        jnp.where(keep[:, None], xf[token_idx], 0).astype(x.dtype)
+    )
+    # EP layout: slots across 'model' (the token routing between the DP-
+    # sharded stream and the EP-sharded buffer is GSPMD's all-to-all)
+    buf = constrain(buf, "moe_buf")
+    # expert FFN per slot (swiglu)
+    h = jnp.einsum("ecd,edf->ecf", buf, params["we_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["we_up"])
+    obuf = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, params["we_down"])
+    obuf = constrain(obuf, "moe_buf")
+
+    vals = obuf[sorted_slot, pos_in_slot]             # (n*k, d)
+    w = top_w.reshape(-1)[sort_idx]
+    contrib = jnp.where(keep[:, None], vals * w[:, None].astype(vals.dtype), 0)
+    y = jnp.zeros((n, d), x.dtype).at[token_idx].add(contrib.astype(x.dtype))
+    y = constrain(y, "moe_tokens")
+
+    if m.num_shared_experts:
+        sh = params["shared"]
+        g = jnp.einsum("nd,df->nf", xf, sh["wi_gate"])
+        uu = jnp.einsum("nd,df->nf", xf, sh["wi_up"])
+        y = y + jnp.einsum("nf,fd->nd", jax.nn.silu(g) * uu, sh["wo"])
+
+    # aux: switch-style load-balance loss + router z-loss
+    me = probs.mean(axis=0)                               # (E,)
+    ce = jnp.zeros((m.num_experts,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0
+    ) / (n * k)
+    lb_loss = m.num_experts * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = dict(lb_loss=lb_loss, z_loss=z_loss,
+               drop_frac=1.0 - keep.mean())
+    return y.reshape(b, s, d), aux
+
+
+# ------------------------------------------------------- distributed (EP)
+def _bucket_by(ids: jax.Array, num_buckets: int, capacity: int):
+    """Sort-based bucketing: ids (n,) -> (sorted order, bucket, pos, keep)."""
+    order = jnp.argsort(ids)
+    sorted_ids = ids[order]
+    seg_start = jnp.searchsorted(sorted_ids, jnp.arange(num_buckets))
+    pos = jnp.arange(ids.shape[0]) - seg_start[jnp.clip(sorted_ids, 0,
+                                                        num_buckets - 1)]
+    keep = (pos < capacity) & (sorted_ids >= 0) & (sorted_ids < num_buckets)
+    return order, sorted_ids, jnp.where(keep, pos, 0), keep
+
+
+def _expert_ffn(params, buf):
+    h = jnp.einsum("ecd,edf->ecf", buf, params["we_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["we_up"])
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, params["we_down"])
+
+
+def _apply_moe_shard_map(params, cfg, x, dispatch, mesh, capacity_factor):
+    """Explicit-collective EP: per device, route my token slice, all-to-all
+    tokens to their expert-owning ranks, run local experts, all-to-all back,
+    combine, all-gather across the model axis (activations are TP-replicated
+    outside this block).
+
+    The paper's technique enters at `slot_of[:, my_rank]`: each source rank
+    selects the REPLICA of each expert that the placement engine anchored
+    for it (greedy-cover choice), so hot experts are served from multiple
+    ranks and the a2a fan-out shrinks."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.flags import FLAGS
+
+    m = cfg.moe
+    n_model = mesh.shape["model"]
+    dispatch = dispatch or identity_dispatch(m.num_experts, n_model)
+    assert dispatch.num_slots % n_model == 0, "slots must divide EP ranks"
+    slots_per_rank = dispatch.num_slots // n_model
+    b, s, d = x.shape
+    k = m.top_k
+    cf = capacity_factor or FLAGS["moe_cf"] or m.capacity_factor
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    dp_size = _axis_prod(mesh, dp)
+    b_local = b // dp_size if b % dp_size == 0 else b
+    n_local = b_local * s
+    n_slice = max(1, -(-n_local // n_model))       # my token slice (padded)
+    pad_tokens = n_model * n_slice - n_local
+    c_send = int(max(8, np.ceil(n_slice * k / n_model * cf)))
+    c_local = int(max(8, np.ceil(n_model * c_send / slots_per_rank * cf)))
+    slot_table = jnp.asarray(dispatch.slot_of)     # (E, R)
+
+    in_param_specs = jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: (P("model", None, None)
+                          if str(getattr(kp[-1], "key", "")).startswith("we_")
+                          else P(*([None] * leaf.ndim))),
+        params,
+    )
+
+    def body(prms, xl):
+        mi = jax.lax.axis_index("model")
+        flat = xl.reshape(n_local, d)
+        if pad_tokens:
+            flat = jnp.pad(flat, ((0, pad_tokens), (0, 0)))
+        xs = jax.lax.dynamic_index_in_dim(
+            flat.reshape(n_model, n_slice, d), mi, 0, keepdims=False
+        )                                               # (n_slice, d)
+        logits = jnp.einsum("nd,de->ne", xs.astype(jnp.float32),
+                            prms["router"])
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(probs, k)          # (n_slice, k)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+        # --- replica selection for THIS source rank (paper technique)
+        my_slots = jnp.take(slot_table, mi, axis=1)     # (E,)
+        slot = my_slots[top_e]                          # (n_slice, k)
+        dst = slot // slots_per_rank
+        slot_local = slot % slots_per_rank
+
+        flat_dst = dst.reshape(-1)
+        order, sdst, pos, keep = _bucket_by(flat_dst, n_model, c_send)
+        tok_idx = order // k
+        send_tok = jnp.zeros((n_model, c_send, d), x.dtype).at[
+            sdst, pos
+        ].add(jnp.where(keep[:, None], xs[tok_idx], 0).astype(x.dtype))
+        send_slot = jnp.full((n_model, c_send), -1, jnp.int32).at[
+            sdst, pos
+        ].max(jnp.where(keep, slot_local.reshape(-1)[order], -1).astype(jnp.int32))
+
+        recv_tok = jax.lax.all_to_all(send_tok, "model", 0, 0)
+        recv_slot = jax.lax.all_to_all(send_slot, "model", 0, 0)
+
+        # --- local expert compute
+        rflat = recv_tok.reshape(n_model * c_send, d)
+        rslot = recv_slot.reshape(-1)
+        o2, ss2, pos2, keep2 = _bucket_by(rslot, slots_per_rank, c_local)
+        buf = jnp.zeros((slots_per_rank, c_local, d), x.dtype).at[
+            jnp.clip(ss2, 0, slots_per_rank - 1), pos2
+        ].add(jnp.where(keep2[:, None], rflat[o2], 0).astype(x.dtype))
+        obuf = _expert_ffn(prms, buf)
+        vals2 = obuf[jnp.clip(ss2, 0, slots_per_rank - 1), pos2]
+        out_flat = jnp.zeros_like(rflat).at[o2].add(
+            jnp.where(keep2[:, None], vals2, 0).astype(x.dtype)
+        )
+        ret = jax.lax.all_to_all(
+            out_flat.reshape(n_model, c_send, d), "model", 0, 0
+        )
+
+        # --- combine at source with router weights
+        vals = ret[sdst, pos]
+        w = top_w.reshape(-1)[order].astype(vals.dtype)
+        contrib = jnp.where(keep[:, None], vals * w[:, None], 0)
+        ys = jnp.zeros((n_slice, d), x.dtype).at[tok_idx].add(
+            contrib.astype(x.dtype)
+        )
+        if m.num_shared_experts:
+            sh = prms["shared"]
+            g = jnp.einsum("nd,df->nf", xs, sh["wi_gate"])
+            uu = jnp.einsum("nd,df->nf", xs, sh["wi_up"])
+            ys = ys + jnp.einsum("nf,fd->nd", jax.nn.silu(g) * uu, sh["wo"])
+        # restore TP replication of activations
+        y_full = jax.lax.all_gather(ys, "model", axis=0, tiled=True)
+        y_full = y_full[:n_local].reshape(b_local, s, d)
+
+        # aux (globally averaged -> replicated)
+        me = probs.mean(axis=0)
+        ce = jnp.zeros((m.num_experts,), jnp.float32).at[
+            top_e.reshape(-1)
+        ].add(1.0) / (n_slice * k)
+        lb = m.num_experts * jnp.sum(me * ce)
+        zl = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+        dropf = 1.0 - keep.mean()
+        axes = ("pod", "data", "model") if "pod" in mesh.axis_names else (
+            "data", "model")
+        lb = jax.lax.pmean(lb, axes)
+        zl = jax.lax.pmean(zl, axes)
+        dropf = jax.lax.pmean(dropf, axes)
+        return y_full, dict(lb_loss=lb, z_loss=zl, drop_frac=dropf)
+
+    y, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(in_param_specs, P(dp, None, None)),
+        out_specs=(P(dp, None, None),
+                   dict(lb_loss=P(), z_loss=P(), drop_frac=P())),
+        check_vma=False,
+    )(params, x)
+    return y, aux
+
+
+def _axis_prod(mesh, axes):
+    if isinstance(axes, tuple):
+        out = 1
+        for a in axes:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axes]

@@ -1,0 +1,168 @@
+"""Mamba2 block: state-space duality (SSD) with chunked matmul scan.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060): instead of the
+GPU-style per-thread selective scan, sequences are split into chunks of
+`chunk_size`; intra-chunk terms are dense matmuls (MXU-friendly, quadratic
+only within a chunk) and inter-chunk state is carried by a lax.scan — the
+same decomposition the paper's Listing 1 uses, mapped to einsums.
+
+Block structure follows Mamba-2: fused in_proj -> (z, x, B, C, dt),
+short causal conv on (x, B, C), SSD core over heads, gated RMSNorm, out_proj.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_norm, dense_init
+
+__all__ = ["init_mamba2", "apply_mamba2", "init_ssm_cache", "ssd_chunked"]
+
+
+def _ssm_dims(cfg):
+    s = cfg.ssm
+    d_in = cfg.d_model * s.expand
+    nh = s.num_heads or d_in // s.head_dim
+    return s, d_in, nh
+
+
+def init_mamba2(key, cfg, dtype) -> dict:
+    s, d_in, nh = _ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_conv = d_in + 2 * s.state_dim  # conv over x, B, C
+    return {
+        # in_proj -> [z (d_in), x (d_in), B (state), C (state), dt (nh)]
+        "w_in": dense_init(ks[0], (cfg.d_model, 2 * d_in + 2 * s.state_dim + nh),
+                           dtype),
+        "conv_w": dense_init(ks[1], (s.conv_width, d_conv), dtype, scale=1.0),
+        "conv_b": jnp.zeros((d_conv,), dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),      # A = -exp(a_log)
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "gate_norm": {"scale": jnp.ones((d_in,), dtype)},
+        "w_out": dense_init(ks[2], (d_in, cfg.d_model), dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B, S, C); w: (W, C) depthwise.  state: (B, W-1, C) carry for
+    decode.  Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, W-1+S, C)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+        for i in range(width)
+    )
+    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    return jax.nn.silu(y + b[None, None, :]), new_state
+
+
+def ssd_chunked(xh, dt, a, bmat, cmat, chunk: int, h0=None):
+    """SSD core.  xh: (B, S, H, P); dt: (B, S, H); a: (H,) negative;
+    bmat/cmat: (B, S, N).  Returns (y (B,S,H,P), h_last (B,H,P,N)).
+
+    Discretization: h_t = exp(a*dt_t) h_{t-1} + dt_t * B_t x_t^T
+                    y_t = C_t h_t
+    Chunked: dense intra-chunk attention-like matmul + inter-chunk scan.
+    """
+    b, s, nh, p = xh.shape
+    n = bmat.shape[-1]
+    nchunks = max(1, -(-s // chunk))
+    pad = nchunks * chunk - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    L = chunk
+    xc = xh.reshape(b, nchunks, L, nh, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nchunks, L, nh).transpose(1, 0, 2, 3)
+    bc = bmat.reshape(b, nchunks, L, n).transpose(1, 0, 2, 3)
+    cc = cmat.reshape(b, nchunks, L, n).transpose(1, 0, 2, 3)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, p, n), jnp.float32)
+
+    def body(h, xs):
+        xci, dtci, bci, cci = xs        # (B,L,H,P), (B,L,H), (B,L,N), (B,L,N)
+        adt = a[None, None, :] * dtci   # (B,L,H) negative
+        cum = jnp.cumsum(adt, axis=1)   # running log-decay within chunk
+        # intra-chunk: y_intra[t] = sum_{u<=t} C_t . B_u x_u dt_u exp(cum_t-cum_u)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]       # (B,L,L,H)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        gate = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0)
+        cb = jnp.einsum("bln,bmn->blm", cci, bci)             # (B,L,L)
+        att = cb[:, :, :, None] * gate                        # (B,L,L,H)
+        y_intra = jnp.einsum(
+            "blmh,bmh,bmhp->blhp", att, dtci, xci.astype(jnp.float32)
+        )
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum(
+            "bln,bhpn,blh->blhp", cci, h, jnp.exp(cum)
+        )
+        # state update: h' = exp(sum adt) h + sum_u exp(cum_L - cum_u) dt_u B_u x_u^T
+        tail = jnp.exp(cum[:, -1:, :] - cum)                  # (B,L,H)
+        dx = xci.astype(jnp.float32) * (dtci * tail)[..., None]  # (B,L,H,P)
+        h_new = (
+            jnp.exp(cum[:, -1, :])[:, :, None, None] * h
+            + jnp.einsum("blhp,bln->bhpn", dx, bci)
+        )
+        return h_new, y_intra + y_inter
+
+    h_last, yc = jax.lax.scan(body, h0, (xc, dtc, bc, cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, nchunks * L, nh, p)[:, :s]
+    return y, h_last
+
+
+def apply_mamba2(params, cfg, x, *, cache: dict | None = None):
+    """x: (B, S, d_model).  cache (decode): dict(conv, h).  Returns (y, cache)."""
+    s_cfg, d_in, nh = _ssm_dims(cfg)
+    b, s, _ = x.shape
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in : d_in + d_in + 2 * s_cfg.state_dim]
+    dt_raw = proj[..., -nh:]
+    conv_state = cache["conv"] if cache else None
+    xbc, conv_state = _causal_conv(
+        xbc, params["conv_w"], params["conv_b"], conv_state
+    )
+    xs = xbc[..., :d_in].reshape(b, s, nh, s_cfg.head_dim)
+    bmat = xbc[..., d_in : d_in + s_cfg.state_dim]
+    cmat = xbc[..., d_in + s_cfg.state_dim :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    a = -jnp.exp(params["a_log"])
+    h0 = cache["h"] if cache else None
+    if s == 1 and cache is not None:
+        # decode fast path: one recurrence step, no chunking
+        adt = jnp.exp(a[None, :] * dt[:, 0])                    # (B,H)
+        dx = xs[:, 0].astype(jnp.float32) * dt[:, 0][..., None]  # (B,H,P)
+        h_new = (
+            adt[:, :, None, None] * h0
+            + jnp.einsum("bhp,bn->bhpn", dx, bmat[:, 0].astype(jnp.float32))
+        )
+        y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), h_new)
+        y = y[:, None]                                          # (B,1,H,P)
+        h_last = h_new
+    else:
+        y, h_last = ssd_chunked(xs, dt, a, bmat.astype(jnp.float32),
+                                cmat.astype(jnp.float32),
+                                s_cfg.chunk_size, h0)
+    y = y + params["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y) * silu(z)
+    y = apply_norm("rmsnorm", params["gate_norm"], y) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    new_cache = dict(conv=conv_state, h=h_last) if cache is not None else None
+    return out, new_cache
+
+
+def init_ssm_cache(cfg, batch, dtype) -> dict:
+    s, d_in, nh = _ssm_dims(cfg)
+    return dict(
+        conv=jnp.zeros((batch, s.conv_width - 1, d_in + 2 * s.state_dim), dtype),
+        h=jnp.zeros((batch, nh, s.head_dim, s.state_dim), jnp.float32),
+    )

@@ -1,0 +1,8 @@
+from .optimizers import (  # noqa: F401
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+from .compression import int8_compress, int8_decompress, compressed_mean  # noqa: F401

@@ -1,0 +1,174 @@
+"""Optimizers (pure JAX, optax-style API but self-contained).
+
+  * adamw     — default for <=100B-class models (fp32 m/v states).
+  * adafactor — factored second moments + no first moment: the optimizer-state
+    footprint that lets deepseek-v3-scale training fit v5e HBM (states are
+    O(rows+cols) instead of O(params); see EXPERIMENTS.md memory table).
+  * cosine_schedule, clip_by_global_norm — the usual training substrate.
+
+Optimizer states mirror the parameter tree structure, so the parameter
+sharding rules apply verbatim to the states (ZeRO-style sharded states for
+free under pjit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, new_state)
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        progress = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+            0.0, 1.0,
+        )
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(grads)
+    ))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+# -------------------------------------------------------------------- AdamW
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(zeros, params),
+                          jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            mhat = m_new / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v_new / (1 - b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+                jnp.float32
+            )
+            return (-lr_t * delta).astype(p.dtype), m_new, v_new
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        updates = jax.tree.map(lambda t: t[0], out,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        m_new = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        v_new = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return updates, AdamWState(step, m_new, v_new)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------- Adafactor
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: dict   # row stats (last dim reduced)
+    vc: dict   # col stats (second-to-last dim reduced)
+    v: dict    # full stats for <2D params only
+
+
+def adafactor(lr, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0) -> Optimizer:
+    """Factored RMS optimizer (Shazeer & Stern).  For a (..., R, C) weight it
+    stores (..., R) + (..., C) statistics — ~0.1% of AdamW's state."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vr0(p):
+            return (jnp.zeros(p.shape[:-1], jnp.float32) if factored(p)
+                    else jnp.zeros((), jnp.float32))
+
+        def vc0(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if factored(p) else jnp.zeros((), jnp.float32))
+
+        def v0(p):
+            return (jnp.zeros((), jnp.float32) if factored(p)
+                    else jnp.zeros(p.shape, jnp.float32))
+
+        return AdafactorState(
+            jnp.zeros((), jnp.int32),
+            jax.tree.map(vr0, params), jax.tree.map(vc0, params),
+            jax.tree.map(v0, params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, vr, vc, v, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if factored(p):
+                vr_new = beta * vr + (1 - beta) * g2.mean(axis=-1)
+                vc_new = beta * vc + (1 - beta) * g2.mean(axis=-2)
+                r = vr_new / jnp.maximum(
+                    vr_new.mean(axis=-1, keepdims=True), eps
+                )
+                pre = g / jnp.sqrt(r[..., None] * vc_new[..., None, :] + eps)
+                v_new = v
+            else:
+                v_new = beta * v + (1 - beta) * g2
+                pre = g / jnp.sqrt(v_new + eps)
+                vr_new, vc_new = vr, vc
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(pre * pre) + 1e-12)
+            pre = pre / jnp.maximum(1.0, rms / clip_threshold)
+            delta = pre + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * delta).astype(p.dtype), vr_new, vc_new, v_new
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, state.v, params)
+        pick = lambda i: jax.tree.map(  # noqa: E731
+            lambda tup: tup[i], out, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return pick(0), AdafactorState(step, pick(1), pick(2), pick(3))
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise KeyError(name)

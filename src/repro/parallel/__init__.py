@@ -1,0 +1,9 @@
+from .sharding import (  # noqa: F401
+    active_mesh,
+    batch_shardings,
+    cache_shardings,
+    constrain,
+    param_shardings,
+    set_active_mesh,
+    spec_for_param_path,
+)

@@ -1,0 +1,3 @@
+from .fault_tolerance import FaultTolerantRunner, HostHealth  # noqa: F401
+from .straggler import StragglerDetector  # noqa: F401
+from .elastic import elastic_remesh  # noqa: F401

@@ -1,0 +1,23 @@
+"""Elastic rescaling: move a training state between meshes.
+
+Checkpoints store host-local full arrays per shard (never device layouts), so
+restoring onto a different mesh is just re-applying the sharding rules for
+the new mesh.  `elastic_remesh` does the same for an in-memory state — used
+when a pod is drained/added mid-run: the runner saves, the fleet re-forms,
+and the state is re-dealt onto the surviving topology."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.parallel import param_shardings
+
+
+def elastic_remesh(state_tree, new_mesh, fsdp: bool = True):
+    """Re-shard every leaf of `state_tree` for `new_mesh` (same global
+    values, new layout)."""
+    struct = jax.eval_shape(lambda: state_tree)
+    shardings = param_shardings(struct, new_mesh, fsdp=fsdp)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state_tree, shardings
+    )

@@ -1,0 +1,86 @@
+"""Tests for the multilevel hypergraph partitioner (hMETIS stand-in)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hpa import connectivity_cost, partition, ubfactor
+from repro.core.hypergraph import Hypergraph
+from repro.core.workloads import random_workload
+
+
+def test_respects_capacity_and_covers_all():
+    wl = random_workload(num_items=120, num_queries=200, density=5, seed=0)
+    hg = wl.hypergraph
+    assign = partition(hg, 6, capacity=25, seed=0)
+    assert assign.shape == (120,)
+    assert assign.min() >= 0 and assign.max() < 6
+    loads = np.bincount(assign, weights=hg.node_weights, minlength=6)
+    assert (loads <= 25 + 1e-9).all()
+
+
+def test_two_cliques_are_separated():
+    """Two 6-cliques joined by one edge: a 2-way partition must cut ~1 edge."""
+    edges = []
+    for a in range(6):
+        for b in range(a + 1, 6):
+            edges.append([a, b])
+            edges.append([a + 6, b + 6])
+    edges.append([0, 6])
+    hg = Hypergraph.from_edges(edges, num_nodes=12)
+    assign = partition(hg, 2, capacity=6, seed=1, nruns=4)
+    cost = connectivity_cost(hg, assign, 2)
+    assert cost <= 2.0  # the bridge, maybe one more
+    # each clique intact
+    assert len(set(assign[:6])) == 1
+    assert len(set(assign[6:])) == 1
+
+
+def test_beats_random_assignment():
+    wl = random_workload(num_items=200, num_queries=400, density=4, seed=3)
+    hg = wl.hypergraph
+    assign = partition(hg, 8, capacity=25, seed=0)
+    rng = np.random.default_rng(0)
+    rand_cost = np.mean([
+        connectivity_cost(hg, rng.permutation(np.repeat(np.arange(8), 25)), 8)
+        for _ in range(3)
+    ])
+    assert connectivity_cost(hg, assign, 8) < 0.8 * rand_cost
+
+
+def test_weighted_nodes():
+    w = np.array([5.0, 5.0, 1.0, 1.0, 1.0, 1.0])
+    hg = Hypergraph.from_edges([[0, 2], [1, 3], [4, 5]], num_nodes=6,
+                               node_weights=w)
+    assign = partition(hg, 2, capacity=7.0, seed=0)
+    loads = np.bincount(assign, weights=w, minlength=2)
+    assert (loads <= 7.0 + 1e-9).all()
+
+
+def test_infeasible_raises():
+    hg = Hypergraph.from_edges([[0, 1]], num_nodes=2)
+    with pytest.raises(ValueError):
+        partition(hg, 1, capacity=1.0)
+
+
+def test_k1_trivial():
+    hg = Hypergraph.from_edges([[0, 1]], num_nodes=2)
+    np.testing.assert_array_equal(partition(hg, 1, capacity=2.0), [0, 0])
+
+
+def test_ubfactor_formula():
+    # paper example semantics: zero slack -> UBfactor 0
+    assert ubfactor(50, 20, 1000) == pytest.approx(0.0)
+    assert ubfactor(50, 40, 1000) == pytest.approx(100 * 1000 / 40000)
+
+
+@given(st.integers(2, 5), st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_partition_always_valid(k, seed):
+    wl = random_workload(num_items=60, num_queries=80, density=3, seed=seed % 7)
+    hg = wl.hypergraph
+    cap = np.ceil(60 / k) + 4
+    assign = partition(hg, k, capacity=cap, seed=seed)
+    loads = np.bincount(assign, weights=hg.node_weights, minlength=k)
+    assert (loads <= cap + 1e-9).all()
+    assert len(assign) == 60

@@ -1,0 +1,117 @@
+"""Unit + property tests for the hypergraph substrate."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hypergraph import Hypergraph, build_incidence
+
+
+def small_hg():
+    return Hypergraph.from_edges(
+        [[0, 1, 2], [2, 3], [3, 4, 5], [0, 5], [1, 2, 3]], num_nodes=6
+    )
+
+
+def test_basic_shapes():
+    hg = small_hg()
+    assert hg.num_nodes == 6
+    assert hg.num_edges == 5
+    assert hg.num_pins == 13
+    assert hg.avg_items_per_query() == pytest.approx(13 / 5)
+    np.testing.assert_array_equal(hg.edge(0), [0, 1, 2])
+    np.testing.assert_array_equal(hg.edge_sizes(), [3, 2, 3, 2, 3])
+
+
+def test_from_edges_dedupes_pins():
+    hg = Hypergraph.from_edges([[1, 1, 2]])
+    np.testing.assert_array_equal(hg.edge(0), [1, 2])
+
+
+def test_incidence_inverse():
+    hg = small_hg()
+    node_ptr, node_edges = hg.incidence()
+    # node 2 appears in edges 0, 1, 4
+    np.testing.assert_array_equal(sorted(hg.node_edges_of(2)), [0, 1, 4])
+    np.testing.assert_array_equal(sorted(hg.node_edges_of(4)), [2])
+
+
+def test_degrees_weighted():
+    hg = Hypergraph.from_edges(
+        [[0, 1], [1, 2]], edge_weights=np.array([2.0, 3.0])
+    )
+    np.testing.assert_allclose(hg.degrees(), [2.0, 5.0, 3.0])
+
+
+def test_subhypergraph_edges_preserves_node_ids():
+    hg = small_hg()
+    sub = hg.subhypergraph_edges(np.array([1, 3]))
+    assert sub.num_edges == 2
+    np.testing.assert_array_equal(sub.edge(0), [2, 3])
+    np.testing.assert_array_equal(sub.edge(1), [0, 5])
+    assert sub.num_nodes == 6  # labels preserved
+
+
+def test_relabel_compacts():
+    hg = small_hg().subhypergraph_edges(np.array([1]))
+    g, old_ids = hg.relabel()
+    assert g.num_nodes == 2
+    np.testing.assert_array_equal(old_ids, [2, 3])
+    np.testing.assert_array_equal(old_ids[g.edge(0)], [2, 3])
+
+
+def test_peel_densest():
+    # clique on 0-3 (dense) plus pendant edges to 4,5,6
+    edges = [[0, 1], [0, 2], [0, 3], [1, 2], [1, 3], [2, 3], [3, 4], [4, 5], [5, 6]]
+    hg = Hypergraph.from_edges(edges, num_nodes=7)
+    dense = set(hg.k_densest_nodes(4))
+    assert dense == {0, 1, 2, 3}
+
+
+def test_prune_to_size_keeps_contained_edges():
+    edges = [[0, 1], [0, 2], [1, 2], [2, 3], [3, 4]]
+    hg = Hypergraph.from_edges(edges, num_nodes=5)
+    pruned = hg.prune_to_size(3)
+    survivors = set(pruned.active_nodes())
+    # every surviving edge is fully inside the surviving node set
+    for e in range(pruned.num_edges):
+        assert set(int(v) for v in pruned.edge(e)) <= survivors
+
+
+def test_mutable_roundtrip():
+    hg = small_hg()
+    m = hg.copy_mutable()
+    new = m.add_node_copy(2)
+    assert new == 6
+    assert m.node_weights[new] == hg.node_weights[2]
+    assert m.replace_in_edge(0, 2, new)
+    frozen = m.freeze()
+    assert frozen.num_nodes == 7
+    np.testing.assert_array_equal(frozen.edge(0), [0, 1, 6])
+
+
+# --------------------------------------------------------------- properties
+edge_strategy = st.lists(
+    st.lists(st.integers(0, 19), min_size=1, max_size=6),
+    min_size=1, max_size=30,
+)
+
+
+@given(edge_strategy)
+@settings(max_examples=50, deadline=None)
+def test_incidence_is_inverse_property(edges):
+    hg = Hypergraph.from_edges(edges, num_nodes=20)
+    node_ptr, node_edges = build_incidence(hg.edge_ptr, hg.edge_nodes, 20)
+    # pin count conserved
+    assert node_ptr[-1] == hg.num_pins
+    for v in range(20):
+        for e in node_edges[node_ptr[v]:node_ptr[v + 1]]:
+            assert v in set(hg.edge(int(e)))
+
+
+@given(edge_strategy, st.floats(1.0, 15.0))
+@settings(max_examples=50, deadline=None)
+def test_peel_respects_weight_budget(edges, budget):
+    hg = Hypergraph.from_edges(edges, num_nodes=20)
+    nodes = hg.k_densest_nodes(budget)
+    assert hg.node_weights[nodes].sum() <= budget + 1e-9

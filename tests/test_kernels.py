@@ -1,0 +1,130 @@
+"""Kernel validation: Pallas interpret mode vs pure-jnp oracles, swept over
+shapes/dtypes (per-kernel allclose against ref.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention as fa_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.decode_attention.kernel import decode_attention as dec_kernel
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan as ssd_kernel
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.models.attention import chunked_attention
+
+TOL = dict(rtol=2e-2, atol=2e-2)  # bf16-ish tolerance
+TOL32 = dict(rtol=2e-4, atol=2e-4)
+
+
+def _qkv(key, b, h, kh, s, t, d, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, kh, t, d), dtype)
+    v = jax.random.normal(ks[2], (b, kh, t, d), dtype)
+    return q, k, v
+
+
+# ----------------------------------------------------------- flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kh,s,d,causal,window",
+    [
+        (1, 2, 2, 128, 32, True, None),
+        (2, 4, 2, 256, 64, True, None),     # GQA
+        (1, 2, 1, 256, 32, True, 128),      # sliding window
+        (1, 2, 2, 128, 32, False, None),    # bidirectional (encoder)
+    ],
+)
+def test_flash_attention_matches_ref(dtype, b, h, kh, s, d, causal, window):
+    q, k, v = _qkv(jax.random.PRNGKey(0), b, h, kh, s, s, d, dtype)
+    out = fa_kernel(q, k, v, causal=causal, window=window,
+                    block_q=64, block_kv=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = TOL if dtype == jnp.bfloat16 else TOL32
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **tol
+    )
+
+
+def test_flash_attention_matches_model_chunked():
+    """Kernel vs the model-layer chunked implementation (two independent
+    flash formulations must agree)."""
+    q, k, v = _qkv(jax.random.PRNGKey(1), 2, 4, 2, 128, 128, 32, jnp.float32)
+    out = fa_kernel(q, k, v, causal=True, block_q=64, block_kv=64,
+                    interpret=True)
+    pos = jnp.broadcast_to(jnp.arange(128, dtype=jnp.int32)[None], (2, 128))
+    ref = chunked_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), pos, pos, causal=True, chunk=64,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL32)
+
+
+# ------------------------------------------------------------- flash decode
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kh,t,d,window,fill",
+    [
+        (1, 2, 2, 256, 32, None, 256),
+        (2, 4, 1, 512, 64, None, 300),      # partially-filled cache
+        (1, 2, 2, 256, 32, 128, 256),       # sliding window
+    ],
+)
+def test_decode_attention_matches_ref(dtype, b, h, kh, t, d, window, fill):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, kh, t, d), dtype)
+    v = jax.random.normal(ks[2], (b, kh, t, d), dtype)
+    kv_pos = jnp.where(jnp.arange(t)[None] < fill,
+                       jnp.arange(t)[None], -1).astype(jnp.int32)
+    kv_pos = jnp.broadcast_to(kv_pos, (b, t))
+    q_pos = jnp.full((b,), fill - 1, jnp.int32)
+    out = dec_kernel(q, k, v, kv_pos, q_pos, window=window, block_kv=128,
+                     interpret=True)
+    ref = decode_attention_ref(q, k, v, kv_pos, q_pos, window=window)
+    tol = TOL if dtype == jnp.bfloat16 else TOL32
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **tol
+    )
+
+
+# ------------------------------------------------------------------ SSD scan
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,p,n,chunk",
+    [(1, 128, 2, 16, 16, 32), (2, 256, 4, 32, 64, 64), (1, 64, 1, 64, 128, 64)],
+)
+def test_ssd_scan_matches_ref(dtype, b, s, h, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.5
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, s, n), jnp.float32) * 0.3
+    cm = jax.random.normal(jax.random.fold_in(ks[3], 1), (b, s, n),
+                           jnp.float32) * 0.3
+    out = ssd_kernel(x, dt.astype(jnp.float32), a, bm, cm, chunk=chunk,
+                     interpret=True)
+    ref = ssd_scan_ref(x, dt.astype(jnp.float32), a, bm, cm)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **tol
+    )
+
+
+def test_ssd_kernel_matches_model_chunked():
+    """Kernel vs the model-layer ssd_chunked (independent formulations)."""
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    b, s, h, p, n = 1, 128, 2, 16, 16
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    cm = jax.random.normal(jax.random.fold_in(ks[3], 1), (b, s, n)) * 0.3
+    out = ssd_kernel(x, dt, a, bm, cm, chunk=32, interpret=True)
+    ref, _ = ssd_chunked(x, dt, a, bm, cm, chunk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)

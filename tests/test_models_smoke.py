@@ -1,0 +1,154 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step on CPU, asserting shapes and finiteness; plus a
+prefill->decode consistency check per family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPE_GRID, get_config, list_configs, reduce_config
+from repro.models import (
+    decode_step, forward, init_cache, init_params, prefill, train_loss,
+)
+
+ARCHS = [
+    "seamless-m4t-medium", "internvl2-2b", "glm4-9b", "nemotron-4-15b",
+    "h2o-danube-1.8b", "olmo-1b", "deepseek-v3-671b", "qwen3-moe-30b-a3b",
+    "mamba2-2.7b", "hymba-1.5b",
+]
+
+B, S = 2, 64
+
+
+def make_batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+        "targets": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.frontend:
+        batch["frontend"] = jax.random.normal(
+            ks[2], (B, cfg.frontend_len, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+def test_all_archs_registered():
+    assert set(ARCHS) <= set(list_configs())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = reduce_config(get_config(arch), dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = make_batch(cfg, key)
+
+    logits, _, _, _ = forward(cfg, params, batch["tokens"],
+                              frontend_embeds=batch.get("frontend"),
+                              chunk=32)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch}: non-finite logits"
+
+    def loss_fn(p):
+        loss, metrics = train_loss(cfg, p, batch, chunk=32)
+        return loss
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss {loss}"
+    gnorm = jax.tree_util.tree_reduce(
+        lambda a, g: a + float(jnp.sum(jnp.square(g.astype(jnp.float32)))),
+        grads, 0.0,
+    )
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grad norm {gnorm}"
+    # loss should be near log(V) at init (sanity on the head)
+    assert abs(float(loss)) < 3 * np.log(cfg.vocab_size) + 5
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "deepseek-v3-671b", "mamba2-2.7b",
+                                  "hymba-1.5b", "seamless-m4t-medium",
+                                  "h2o-danube-1.8b"])
+def test_prefill_then_decode_matches_forward(arch):
+    """Teacher-forced decode after prefill must match the full forward pass
+    (cache correctness across GQA/MLA/SSM/hybrid/enc-dec)."""
+    cfg = reduce_config(get_config(arch), dtype="float32")
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    batch = make_batch(cfg, key)
+    tokens = batch["tokens"]
+
+    full_logits, _, _, _ = forward(cfg, params, tokens,
+                                   frontend_embeds=batch.get("frontend"),
+                                   chunk=32)
+
+    n_prefill = S - 4
+    pre_batch = {"tokens": tokens[:, :n_prefill]}
+    if cfg.frontend:
+        pre_batch["frontend"] = batch["frontend"]
+    last, cache = prefill(cfg, params, pre_batch, max_len=S, chunk=32)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(full_logits[:, n_prefill - 1]),
+        rtol=2e-3, atol=2e-3,
+    )
+    for t in range(n_prefill, S):
+        pos = jnp.full((B, 1), t, jnp.int32)
+        logits, cache = decode_step(cfg, params, cache, tokens[:, t:t+1], pos,
+                                    chunk=32)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, t]),
+            rtol=2e-3, atol=2e-3,
+            err_msg=f"{arch}: decode diverges at t={t}",
+        )
+
+
+def test_swa_ring_cache_decode():
+    """Sliding-window ring cache (window_only) must agree with the full cache
+    once enough context has been consumed."""
+    cfg = reduce_config(get_config("h2o-danube-1.8b"), dtype="float32",
+                        sliding_window=16)
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    tokens = jax.random.randint(key, (1, 48), 0, cfg.vocab_size)
+
+    full_logits, _, _, _ = forward(cfg, params, tokens, chunk=16)
+
+    # ring cache sized at the window; feed tokens one by one
+    cache = init_cache(cfg, 1, 48, window_only=True)
+    for t in range(48):
+        pos = jnp.full((1, 1), t, jnp.int32)
+        logits, cache = decode_step(cfg, params, cache, tokens[:, t:t+1], pos,
+                                    chunk=16)
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(full_logits[:, -1]), rtol=3e-3, atol=3e-3
+    )
+
+
+def test_moe_dispatch_with_placement_plan():
+    """The paper's expert placement plugs into the MoE block: replicated
+    experts produce the same function value as the identity placement when
+    replicas share weights."""
+    from repro.core import plan_expert_placement, synthetic_routing_trace
+    from repro.models import dispatch_from_plan, identity_dispatch
+
+    cfg = reduce_config(get_config("qwen3-moe-30b-a3b"), dtype="float32")
+    key = jax.random.PRNGKey(3)
+    trace = synthetic_routing_trace(cfg.moe.num_experts, 100,
+                                    top_k=cfg.moe.top_k, seed=0)
+    plan = plan_expert_placement(trace, cfg.moe.num_experts, num_ranks=2,
+                                 slots_per_rank=6, algorithm="lmbr")
+    disp = dispatch_from_plan(plan)
+    assert disp.num_slots == 12
+    params = init_params(cfg, key, moe_dispatch=disp)
+    batch = make_batch(cfg, key)
+    logits, _, _, _ = forward(cfg, params, batch["tokens"],
+                              moe_dispatch=disp, chunk=32)
+    assert np.isfinite(np.asarray(logits)).all()
+
+    # identity-dispatch model with the same per-expert weights must agree
+    ident = identity_dispatch(cfg.moe.num_experts)
+    params_id = init_params(cfg, key, moe_dispatch=ident)
+    logits_id, _, _, _ = forward(cfg, params_id, batch["tokens"],
+                                 moe_dispatch=ident, chunk=32)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_id),
+                               rtol=5e-3, atol=5e-3)

@@ -1,0 +1,102 @@
+"""Tests for the production placement services (flat, hierarchical, refit,
+expert placement, shard placement)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    PlacementPlan, PlacementService, baseline_contiguous_placement,
+    mixture_batch_recipes, plan_expert_placement, plan_shard_placement,
+    random_workload, synthetic_routing_trace,
+)
+
+
+@pytest.fixture(scope="module")
+def queries():
+    return random_workload(num_items=120, num_queries=250, density=6, seed=2).queries
+
+
+def test_fit_and_select(queries):
+    svc = PlacementService("lmbr", seed=0)
+    plan = svc.fit(queries, 120, 8, 30)
+    parts, accessed = plan.select(queries[0])
+    got = sorted(int(v) for items in accessed for v in items)
+    assert got == sorted(int(v) for v in queries[0])
+    assert plan.span(queries[0]) == len(parts)
+
+
+def test_json_roundtrip(queries):
+    svc = PlacementService("ds", seed=0)
+    plan = svc.fit(queries, 120, 8, 30)
+    plan2 = PlacementPlan.from_json(plan.to_json())
+    assert (plan2.member == plan.member).all()
+    assert plan2.capacity == plan.capacity
+
+
+def test_hierarchical_spans(queries):
+    svc = PlacementService("lmbr", seed=0)
+    hp = svc.fit_hierarchical(queries, 120, num_pods=2, hosts_per_pod=4,
+                              host_capacity=30)
+    pod_spans, host_spans = zip(*(hp.spans(q) for q in queries[:50]))
+    assert max(pod_spans) <= 2
+    assert all(h >= p for p, h in zip(pod_spans, host_spans))
+    # pod-level co-location: most queries stay inside one pod
+    assert np.mean(np.asarray(pod_spans) == 1) > 0.5
+
+
+def test_refit_improves_drifted_workload():
+    wl_old = random_workload(num_items=120, num_queries=200, density=6, seed=2)
+    wl_new = random_workload(num_items=120, num_queries=100, density=6, seed=99)
+    svc = PlacementService("hpa", seed=0)  # no replication yet -> room to refit
+    plan = svc.fit(wl_old.queries, 120, 10, 30)
+    before = plan.avg_span(wl_new.queries)
+    plan2 = svc.refit(plan, wl_new.queries)
+    after = plan2.avg_span(wl_new.queries)
+    assert after <= before
+    # refit only adds copies, never removes
+    assert (plan2.member >= plan.member).all()
+
+
+def test_expert_placement_reduces_span_and_a2a():
+    trace = synthetic_routing_trace(num_experts=64, num_groups=300, top_k=8,
+                                    seed=0)
+    base = baseline_contiguous_placement(64, 8, slots_per_rank=12)
+    plan = plan_expert_placement(trace, 64, 8, slots_per_rank=12,
+                                 algorithm="lmbr", seed=0)
+    assert plan.avg_span(trace) < base.avg_span(trace)
+    assert plan.a2a_bytes(trace, 1024, 2048) < base.a2a_bytes(trace, 1024, 2048)
+    # structural invariants for the device tables
+    assert plan.member.sum(axis=1).max() <= 12
+    assert plan.member.any(axis=0).all()  # every expert placed
+    for r in range(8):
+        slots = plan.slot_to_expert[r]
+        live = slots[slots >= 0]
+        assert len(set(live.tolist())) == len(live)  # no dup expert per rank
+        for s, e in enumerate(slots):
+            if e >= 0:
+                assert plan.expert_slot_table[e, r] == s
+
+
+def test_expert_placement_needs_enough_slots():
+    with pytest.raises(ValueError):
+        plan_expert_placement([np.array([0, 1])], 64, 4, slots_per_rank=8)
+
+
+def test_shard_placement_failover():
+    recipes = mixture_batch_recipes(100, 150, seed=1)
+    plan = plan_shard_placement(recipes, 100, 12, capacity=30, algorithm="pra3")
+    assert plan.survives_failures(1)
+    assert plan.survives_failures(2)
+    hosts, accessed = plan.hosts_for_batch(recipes[0])
+    # failure of the primary host still covers the batch
+    hosts2, _ = plan.cover_excluding(recipes[0], {hosts[0]})
+    assert hosts[0] not in hosts2
+    got = sorted(int(v) for it in _ for v in it)
+    assert got == sorted(set(int(v) for v in recipes[0]))
+
+
+def test_shard_placement_beats_random():
+    recipes = mixture_batch_recipes(100, 200, seed=3)
+    rnd = plan_shard_placement(recipes, 100, 12, capacity=30, algorithm="random3")
+    pra = plan_shard_placement(recipes, 100, 12, capacity=30, algorithm="pra3")
+    assert pra.avg_span(recipes) < rnd.avg_span(recipes)

@@ -1,0 +1,93 @@
+"""Unit tests for the roofline derivation and dry-run plumbing (no devices)."""
+
+import numpy as np
+import pytest
+
+from repro.configs import SHAPE_GRID, get_config
+from repro.launch import roofline as rf
+from repro.launch.steps import input_specs, shape_skip_reason
+
+
+def test_collective_stats_parses_hlo():
+    hlo = """
+  %all-gather.20 = f32[8,64,32]{2,1,0} all-gather(%x), channel_id=1
+  %ar = (f32[256,512]{1,0}, f32[256,512]{1,0}) all-reduce(%a, %b), channel_id=2
+  %a2a.1 = bf16[16,128]{1,0} all-to-all(%y), channel_id=3
+  %ag-start = f32[4]{0} all-gather-start(%z), channel_id=4
+  %ag-done = f32[4]{0} all-gather-done(%ag-start)
+  %not-a-coll = f32[4]{0} add(%p, %q)
+"""
+    st = rf.collective_stats(hlo)
+    assert st["all-gather"]["count"] == 2  # plain + start (done not counted)
+    assert st["all-gather"]["bytes"] == 8 * 64 * 32 * 4 + 16
+    assert st["all-reduce"]["count"] == 1
+    assert st["all-reduce"]["bytes"] == 2 * 256 * 512 * 4
+    assert st["all-to-all"]["bytes"] == 16 * 128 * 2
+    assert st["collective-permute"]["count"] == 0
+
+
+def test_roofline_terms_and_dominance():
+    r = rf.roofline(flops_per_dev=197e12, bytes_per_dev=819e9 / 2,
+                    coll_bytes_per_dev=0, chips=256)
+    assert r["compute_s"] == pytest.approx(1.0)
+    assert r["memory_s"] == pytest.approx(0.5)
+    assert r["dominant"] == "compute"
+    assert r["roofline_fraction"] == pytest.approx(1.0)
+    r2 = rf.roofline(1e12, 1e9, 500e9, chips=256)
+    assert r2["dominant"] == "collective"
+    assert r2["roofline_fraction"] < 0.01
+
+
+def test_shape_skips_match_design():
+    quadratic = ["seamless-m4t-medium", "internvl2-2b", "glm4-9b",
+                 "nemotron-4-15b", "olmo-1b", "deepseek-v3-671b",
+                 "qwen3-moe-30b-a3b"]
+    subq = ["h2o-danube-1.8b", "mamba2-2.7b", "hymba-1.5b"]
+    long = SHAPE_GRID["long_500k"]
+    for a in quadratic:
+        assert shape_skip_reason(get_config(a), long) is not None, a
+    for a in subq:
+        assert shape_skip_reason(get_config(a), long) is None, a
+    # nothing else skips
+    for a in quadratic + subq:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_skip_reason(get_config(a), SHAPE_GRID[s]) is None
+
+
+def test_input_specs_shapes():
+    cfg = get_config("glm4-9b")
+    tr = input_specs(cfg, SHAPE_GRID["train_4k"])
+    assert tr["batch"]["tokens"].shape == (256, 4096)
+    de = input_specs(cfg, SHAPE_GRID["decode_32k"])
+    assert de["tokens"].shape == (128, 1)
+    cfg_a = get_config("seamless-m4t-medium")
+    pre = input_specs(cfg_a, SHAPE_GRID["prefill_32k"])
+    assert pre["batch"]["frontend"].shape == (32, 1024, 1024)
+
+
+def test_model_flops_sane():
+    cfg = get_config("glm4-9b")
+    n = cfg.param_count()
+    assert 8e9 < n < 11e9, f"glm4-9b param count {n/1e9:.2f}B"
+    tr = rf.model_flops(cfg, SHAPE_GRID["train_4k"], True)
+    assert tr == pytest.approx(6 * n * 256 * 4096)
+    ds = get_config("deepseek-v3-671b")
+    assert 6e11 < ds.param_count() < 7.5e11, ds.param_count() / 1e9
+    assert ds.active_param_count() < 0.1 * ds.param_count()
+    q3 = get_config("qwen3-moe-30b-a3b")
+    assert 2.5e10 < q3.param_count() < 3.5e10, q3.param_count() / 1e9
+    assert 2e9 < q3.active_param_count() < 4.5e9, q3.active_param_count() / 1e9
+
+
+def test_all_arch_param_counts_match_names():
+    expect = {
+        "olmo-1b": (0.9e9, 1.6e9),
+        "hymba-1.5b": (1.2e9, 2.1e9),
+        "h2o-danube-1.8b": (1.4e9, 2.2e9),
+        "internvl2-2b": (1.5e9, 2.6e9),
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "nemotron-4-15b": (13e9, 18e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_config(name).param_count()
+        assert lo < n < hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"

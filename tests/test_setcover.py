@@ -1,0 +1,102 @@
+"""Greedy set cover (replica selection) tests incl. brute-force optimality gap."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.setcover import (
+    Placement, cover_for_query, greedy_set_cover, query_span,
+)
+
+
+def member_from_parts(parts, num_items):
+    m = np.zeros((len(parts), num_items), dtype=bool)
+    for p, items in enumerate(parts):
+        m[p, list(items)] = True
+    return m
+
+
+def test_greedy_picks_largest_overlap_first():
+    member = member_from_parts([[0, 1, 2], [2, 3], [3, 4]], 5)
+    chosen = greedy_set_cover(np.array([0, 1, 2, 3]), member)
+    assert chosen[0] == 0  # covers 3 of 4
+    assert query_span(np.array([0, 1, 2, 3]), member) == 2
+
+
+def test_cover_attributes_items_to_first_holder():
+    member = member_from_parts([[0, 1], [1, 2]], 3)
+    chosen, accessed = cover_for_query(np.array([0, 1, 2]), member)
+    assert chosen == [0, 1]
+    np.testing.assert_array_equal(sorted(accessed[0]), [0, 1])
+    np.testing.assert_array_equal(accessed[1], [2])  # 1 already read from p0
+
+
+def test_unplaced_item_raises():
+    member = member_from_parts([[0]], 2)
+    with pytest.raises(ValueError):
+        greedy_set_cover(np.array([1]), member)
+
+
+def test_paper_fig2_style_example():
+    """Replication reduces span (fig. 2): without replication span(e)=2, the
+    replicated layout brings it to 1."""
+    # items 0..5 on 3 partitions of capacity 3; query touches {2,3}
+    no_rep = member_from_parts([[0, 1, 2], [3, 4], [5]], 6)
+    with_rep = member_from_parts([[0, 1, 2], [2, 3, 4], [5]], 6)
+    q = np.array([2, 3])
+    assert query_span(q, no_rep) == 2
+    assert query_span(q, with_rep) == 1
+
+
+def brute_force_optimal(query, member):
+    n = member.shape[0]
+    for size in range(1, n + 1):
+        for combo in itertools.combinations(range(n), size):
+            if member[list(combo)][:, query].any(axis=0).all():
+                return size
+    raise AssertionError("uncoverable")
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_greedy_within_log_bound_of_optimal(data):
+    num_items = data.draw(st.integers(2, 8))
+    n_parts = data.draw(st.integers(2, 5))
+    member = np.zeros((n_parts, num_items), dtype=bool)
+    for v in range(num_items):
+        copies = data.draw(
+            st.lists(st.integers(0, n_parts - 1), min_size=1, max_size=n_parts,
+                     unique=True)
+        )
+        member[copies, v] = True
+    q = np.asarray(
+        data.draw(st.lists(st.integers(0, num_items - 1), min_size=1,
+                           max_size=num_items, unique=True))
+    )
+    greedy = len(greedy_set_cover(q, member))
+    opt = brute_force_optimal(q, member)
+    # greedy is a (ln q + 1)-approximation of min set cover
+    assert opt <= greedy <= opt * (np.log(len(q)) + 1)
+
+
+def test_placement_accounting():
+    pl = Placement.empty(3, 5, capacity=3.0)
+    pl.add(0, [0, 1])
+    pl.add(1, [1, 2, 3])
+    pl.add(2, [4])
+    assert pl.partition_weight(1) == 3.0
+    assert pl.free_space(0) == 1.0
+    assert pl.replication_factor() == pytest.approx(6 / 5)
+    pl.validate()
+    pl.add(1, [4])
+    with pytest.raises(ValueError):
+        pl.validate()
+
+
+def test_placement_validate_catches_unplaced():
+    pl = Placement.empty(2, 3, capacity=3.0)
+    pl.add(0, [0, 1])
+    with pytest.raises(ValueError, match="unplaced"):
+        pl.validate()
