@@ -1,0 +1,22 @@
+# Shared gates for every PR: run the same commands CI / the next session runs.
+PY := PYTHONPATH=src python
+
+.PHONY: test test-fast bench-smoke bench
+
+# tier-1 verify (ROADMAP contract).  NB: currently red on pre-existing
+# jax/pallas API drift in tests/test_kernels.py (failing since the seed);
+# the gate is "no worse than the previous PR", not "green".
+test:
+	$(PY) -m pytest -x -q
+
+# skip the slow end-to-end train/distribution tests
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+# cheap perf signal: span engine old-vs-new timings (BENCH_spans.json)
+bench-smoke:
+	$(PY) -m benchmarks.run --only bench_spans
+
+# full quick benchmark suite (all paper figures, single seed)
+bench:
+	$(PY) -m benchmarks.run

@@ -1,0 +1,83 @@
+"""Span-engine benchmark: per-edge reference greedy cover vs the batched
+bitset engine (numpy backend, and the jitted JAX gain kernel when available)
+at ISPD98 ibm01/ibm04 scale.
+
+Emits benchmarks/results/BENCH_spans.json so the perf trajectory of the hot
+path is tracked across PRs; also printed as CSV for eyeballing.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import flags
+from repro.core import ALGORITHMS, ispd_like_workload
+from repro.core.setcover import batched_spans_csr, greedy_set_cover
+
+from .common import emit_csv, save_json
+
+# (circuit, num_nodes, workload seed): ibm01 / ibm04 of the ISPD98 suite
+SCALES = [("ibm01-like", 12752, 0), ("ibm04-like", 27507, 3)]
+
+
+def _reference_spans(hg, member) -> np.ndarray:
+    """The pre-engine path: one Python greedy loop per hyperedge."""
+    out = np.zeros(hg.num_edges, dtype=np.int64)
+    for e in range(hg.num_edges):
+        out[e] = len(greedy_set_cover(hg.edge(e), member))
+    return out
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = []
+    scales = SCALES[:1] if quick else SCALES
+    for circuit, n_nodes, seed in scales:
+        wl = ispd_like_workload(num_nodes=n_nodes, seed=seed)
+        hg = wl.hypergraph
+        capacity = int(np.ceil(n_nodes / 20))
+        pl = ALGORITHMS["ihpa"](hg, 35, capacity, seed=0)
+        member = pl.member
+
+        t0 = time.perf_counter()
+        ref = _reference_spans(hg, member)
+        t_ref = time.perf_counter() - t0
+
+        engines = [("batched-numpy", "numpy")]
+        try:
+            import jax  # noqa: F401
+            engines.append(("batched-jax", "jax"))
+        except ImportError:
+            pass
+        rows.append(dict(
+            circuit=circuit, edges=hg.num_edges, engine="reference-loop",
+            seconds=round(t_ref, 4), speedup=1.0,
+            avg_span=round(float(ref.mean()), 4),
+        ))
+        for label, backend in engines:
+            flags.FLAGS["span_backend"] = backend
+            try:
+                # warm (jit compile for the jax backend), then measure
+                batched_spans_csr(hg.edge_ptr, hg.edge_nodes, member)
+                t0 = time.perf_counter()
+                spans = batched_spans_csr(hg.edge_ptr, hg.edge_nodes, member)
+                dt = time.perf_counter() - t0
+            finally:
+                flags.reset()
+            assert (spans == ref).all(), f"{label} diverged from reference"
+            rows.append(dict(
+                circuit=circuit, edges=hg.num_edges, engine=label,
+                seconds=round(dt, 4),
+                speedup=round(t_ref / max(dt, 1e-9), 1),
+                avg_span=round(float(spans.mean()), 4),
+            ))
+            print(f"  {rows[-1]}", flush=True)
+    emit_csv("bench_spans", rows,
+             ["circuit", "edges", "engine", "seconds", "speedup", "avg_span"])
+    save_json("BENCH_spans", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -17,6 +17,10 @@ Layout:
 from .hypergraph import Hypergraph, MutableHypergraph  # noqa: F401
 from .setcover import (  # noqa: F401
     Placement,
+    SpanMaintainer,
+    WorkloadCover,
+    batched_cover_csr,
+    batched_spans_csr,
     cover_for_query,
     greedy_set_cover,
     query_span,

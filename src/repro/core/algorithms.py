@@ -22,7 +22,14 @@ import numpy as np
 
 from . import hpa as hpa_mod
 from .hypergraph import Hypergraph
-from .setcover import Placement, cover_for_query, greedy_set_cover
+from .setcover import (
+    Placement,
+    SpanMaintainer,
+    batched_cover_csr,
+    batched_spans_csr,
+    cover_for_query,
+    greedy_set_cover,
+)
 
 __all__ = [
     "random_placement", "hpa_placement", "ihpa", "ds", "pra", "lmbr",
@@ -89,11 +96,8 @@ def hpa_placement(
 # ----------------------------------------------------------- residual helpers
 def _residual_edges(hg: Hypergraph, pl: Placement, min_span: int) -> np.ndarray:
     """Edge ids with span > min_span (pruneHypergraphBySpan keeps these)."""
-    keep = []
-    for e in range(hg.num_edges):
-        if len(greedy_set_cover(hg.edge(e), pl.member)) > min_span:
-            keep.append(e)
-    return np.asarray(keep, dtype=np.int64)
+    spans = batched_spans_csr(hg.edge_ptr, hg.edge_nodes, pl.member)
+    return np.flatnonzero(spans > min_span)
 
 
 # ------------------------------------------------------------ Algorithm 1: IHPA
@@ -103,11 +107,12 @@ def ihpa(
     ne = min_partitions(hg, capacity)
     assign = hpa_mod.partition(hg, ne, capacity, seed=seed, nruns=nruns)
     pl = _assign_to_placement(hg, assign, n, capacity)
+    spans = SpanMaintainer(hg, pl)  # incremental: only touched edges recompute
     used = ne
     round_ = 0
     while used < n:
         round_ += 1
-        edge_ids = _residual_edges(hg, pl, 1)
+        edge_ids = spans.residual_edges(1)
         if len(edge_ids) == 0:
             break
         resid = hg.subhypergraph_edges(edge_ids)
@@ -117,11 +122,10 @@ def ihpa(
         if resid.total_node_weight() > rem_cap:
             # §4.2 text: drop lowest-span hyperedges one at a time (these gain
             # least from replication) until the residual fits
-            spans = np.asarray(
-                [len(greedy_set_cover(old_ids[resid.edge(e)], pl.member))
-                 for e in range(resid.num_edges)]
+            spans_r = batched_spans_csr(
+                resid.edge_ptr, old_ids[resid.edge_nodes], pl.member
             )
-            order = np.argsort(spans, kind="stable")  # ascending span
+            order = np.argsort(spans_r, kind="stable")  # ascending span
             pin_deg = np.bincount(resid.edge_nodes, minlength=resid.num_nodes)
             live_w = float(
                 resid.node_weights[np.flatnonzero(pin_deg > 0)].sum()
@@ -146,8 +150,8 @@ def ihpa(
         sub_assign = hpa_mod.partition(
             resid, n_new, capacity, seed=seed + round_, nruns=nruns
         )
-        for v_new, p in enumerate(sub_assign):
-            pl.member[used + p, old_ids[v_new]] = True
+        pl.member[used + sub_assign, old_ids] = True
+        spans.notify_items(old_ids)
         used += n_new
     return pl
 
@@ -159,9 +163,10 @@ def ds(
     ne = min_partitions(hg, capacity)
     assign = hpa_mod.partition(hg, ne, capacity, seed=seed, nruns=nruns)
     pl = _assign_to_placement(hg, assign, n, capacity)
+    spans = SpanMaintainer(hg, pl)
     used = ne
     while used < n:
-        edge_ids = _residual_edges(hg, pl, 1)
+        edge_ids = spans.residual_edges(1)
         if len(edge_ids) == 0:
             break
         resid = hg.subhypergraph_edges(edge_ids)
@@ -169,6 +174,7 @@ def ds(
         if len(dense_nodes) == 0:
             break
         pl.member[used, dense_nodes] = True
+        spans.notify_items(dense_nodes)
         used += 1
     return pl
 
@@ -196,17 +202,24 @@ def pra(
     assign = hpa_mod.partition(hg, ne, capacity, seed=seed, nruns=nruns)
     pl0 = _assign_to_placement(hg, assign, ne, capacity)
 
-    # score_v = #edges where v is the only member of its partition (line 4)
+    # score_v = #edges where v is the only member of its partition (line 4):
+    # a pin is "solo" iff its (edge, partition) pin-count is exactly 1.
+    # CSR-vectorized; the bincount accumulates the same weights in the same
+    # (edge-major) order as the original per-edge loop.
     score = np.zeros(hg.num_nodes, dtype=np.float64)
-    for e in range(hg.num_edges):
-        pins = hg.edge(e)
-        parts, counts = np.unique(assign[pins], return_counts=True)
-        solo = parts[counts == 1]
-        if len(solo):
-            solo_set = set(int(p) for p in solo)
-            for v in pins:
-                if int(assign[v]) in solo_set:
-                    score[v] += hg.edge_weights[e]
+    if hg.num_pins:
+        pin_edge = np.repeat(
+            np.arange(hg.num_edges, dtype=np.int64), hg.edge_sizes()
+        )
+        pin_part = assign[hg.edge_nodes]
+        cnt = np.zeros((hg.num_edges, ne), dtype=np.int32)
+        np.add.at(cnt, (pin_edge, pin_part), 1)
+        solo = cnt[pin_edge, pin_part] == 1
+        score = np.bincount(
+            hg.edge_nodes[solo],
+            weights=hg.edge_weights[pin_edge[solo]],
+            minlength=hg.num_nodes,
+        )
 
     budget = n * capacity - hg.total_node_weight()  # spare replication room
     mutable = hg.copy_mutable()
@@ -267,11 +280,17 @@ class _LMBRState:
         self.edge_cover: list[dict[int, np.ndarray]] = []
         # part_edges[p] = set of edges that access partition p
         self.part_edges: list[set[int]] = [set() for _ in range(pl.num_partitions)]
+        # one batched cover replaces E per-edge greedy loops; assembly below
+        # inserts edges/partitions in the exact order the per-edge loop did
+        cov = batched_cover_csr(
+            hg.edge_ptr, hg.edge_nodes, pl.member, with_pin_parts=True
+        )
         for e in range(hg.num_edges):
-            chosen, accessed = cover_for_query(hg.edge(e), pl.member)
-            cov = {p: items for p, items in zip(chosen, accessed)}
-            self.edge_cover.append(cov)
-            for p in chosen:
+            q = hg.edge_nodes[hg.edge_ptr[e]: hg.edge_ptr[e + 1]]
+            pp = cov.pin_parts[hg.edge_ptr[e]: hg.edge_ptr[e + 1]]
+            c = {int(p): q[pp == p] for p in cov.chosen(e)}
+            self.edge_cover.append(c)
+            for p in c:
                 self.part_edges[p].add(e)
 
     def recompute_edge(self, e: int):
@@ -424,12 +443,21 @@ def lmbr(
         pl.member[dest, items] = True
         moves += 1
         # recompute covers of edges that might benefit (those reading src
-        # and touching dest or any moved item)
-        item_set = set(int(v) for v in items)
+        # and touching dest or any moved item).  The candidate scan is
+        # vectorized; `affected` is still built by inserting in the union
+        # set's iteration order, so downstream set iteration (and therefore
+        # every float accumulation) matches the per-edge loop exactly.
+        cand = list(state.part_edges[src] | state.part_edges[dest])
         affected = set()
-        for e in state.part_edges[src] | state.part_edges[dest]:
-            if any(int(v) in item_set for v in hg.edge(e)):
-                affected.add(e)
+        if cand:
+            cand_arr = np.asarray(cand, dtype=np.int64)
+            ptr, nodes_ = hg.edges_csr(cand_arr)
+            hit = np.isin(nodes_, items)
+            ch = np.concatenate([[0], np.cumsum(hit)])
+            touches = ch[ptr[1:]] > ch[ptr[:-1]]
+            for e, t in zip(cand, touches):
+                if t:
+                    affected.add(e)
         for e in affected:
             state.recompute_edge(e)
         # refresh PQ entries involving dest (Algorithm 4 lines 12-15)

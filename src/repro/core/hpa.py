@@ -18,6 +18,9 @@ uncoarsening level, (4) capacity fixup.
 
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
+
 import numpy as np
 
 from .hypergraph import Hypergraph
@@ -38,12 +41,12 @@ def ubfactor(capacity: float, num_partitions: int, total_items: float) -> float:
 
 
 def connectivity_cost(hg: Hypergraph, assign: np.ndarray, k: int) -> float:
-    """sum_e w_e * (lambda_e - 1)."""
-    cost = 0.0
-    for e in range(hg.num_edges):
-        parts = np.unique(assign[hg.edge(e)])
-        cost += hg.edge_weights[e] * (len(parts) - 1)
-    return cost
+    """sum_e w_e * (lambda_e - 1), vectorized over the pin-count matrix."""
+    if hg.num_edges == 0:
+        return 0.0
+    cnt = _edge_part_counts(hg, assign, k)
+    lam = (cnt > 0).sum(axis=1)
+    return float((hg.edge_weights * (lam - 1)).sum())
 
 
 def _edge_part_counts(hg: Hypergraph, assign: np.ndarray, k: int) -> np.ndarray:
@@ -59,29 +62,46 @@ def _edge_part_counts(hg: Hypergraph, assign: np.ndarray, k: int) -> np.ndarray:
 # --------------------------------------------------------------- coarsening
 def _coarsen_once(hg: Hypergraph, capacity: float, rng: np.random.Generator):
     """One level of connectivity-weighted matching.  Returns (coarse_hg, map)
-    where map[v] = coarse cluster id."""
+    where map[v] = coarse cluster id.
+
+    CSR-vectorized but bit-identical to the original per-node dict loop:
+    neighbor scores accumulate in the same (incident-edge, pin) stream order,
+    and ties between equal scores resolve to the first-encountered neighbor.
+    """
     n = hg.num_nodes
     node_ptr, node_edges = hg.incidence()
-    match = np.full(n, -1, dtype=np.int64)
-    order = rng.permutation(n)
+    order = rng.permutation(n).tolist()
     esz = hg.edge_sizes()
+    edge_ok = (esz >= 2) & (esz <= _MAX_EDGE_FOR_MATCH)
+    wpe = np.where(edge_ok, hg.edge_weights / np.maximum(esz - 1, 1), 0.0)
+    # per node, the concatenated pins of its eligible incident edges — the
+    # neighbor-candidate stream, in the original scan order.  The scan below
+    # is the original dict loop verbatim, just over plain Python lists (CSR
+    # slicing and numpy scalar boxing were the cost, not the dict).
+    counts = np.where(edge_ok[node_edges], esz[node_edges], 0)
+    total = int(counts.sum())
+    cstart = np.zeros(len(counts) + 1, dtype=np.int64)
+    np.cumsum(counts, out=cstart[1:])
+    entry = np.repeat(np.arange(len(counts), dtype=np.int64), counts)
+    off = np.arange(total, dtype=np.int64) - cstart[entry]
+    s_edges = node_edges[entry]
+    s_pins = hg.edge_nodes[hg.edge_ptr[s_edges] + off].tolist()
+    s_w = wpe[s_edges].tolist()
+    v_start = cstart[node_ptr].tolist()
+    nw = hg.node_weights.tolist()
+    match = [-1] * n
     for v in order:
         if match[v] != -1:
             continue
-        # score neighbors by sum(w_e / (|e|-1)) over shared edges
         scores: dict[int, float] = {}
-        for e in node_edges[node_ptr[v] : node_ptr[v + 1]]:
-            s = esz[e]
-            if s < 2 or s > _MAX_EDGE_FOR_MATCH:
-                continue
-            we = hg.edge_weights[e] / (s - 1)
-            for u in hg.edge(int(e)):
-                if u != v and match[u] == -1:
-                    scores[int(u)] = scores.get(int(u), 0.0) + we
+        for i in range(v_start[v], v_start[v + 1]):
+            u = s_pins[i]
+            if u != v and match[u] == -1:
+                scores[u] = scores.get(u, 0.0) + s_w[i]
         best_u, best_s = -1, 0.0
-        wv = hg.node_weights[v]
+        wv = nw[v]
         for u, s in scores.items():
-            if s > best_s and wv + hg.node_weights[u] <= capacity:
+            if s > best_s and wv + nw[u] <= capacity:
                 best_u, best_s = u, s
         if best_u >= 0:
             match[v] = best_u
@@ -100,17 +120,42 @@ def _coarsen_once(hg: Hypergraph, capacity: float, rng: np.random.Generator):
     # contract
     cw = np.zeros(nxt, dtype=np.float64)
     np.add.at(cw, cmap, hg.node_weights)
-    # rebuild edges on clusters, dedup identical edges
-    edge_map: dict[tuple, float] = {}
-    for e in range(hg.num_edges):
-        pins = tuple(sorted(set(int(cmap[u]) for u in hg.edge(e))))
-        if len(pins) < 2:
+    # rebuild edges on clusters: within-edge sort+dedup vectorized, then
+    # identical edges merged in first-occurrence order (same as the dict)
+    E = hg.num_edges
+    cpins = cmap[hg.edge_nodes]
+    pin_edge = np.repeat(np.arange(E, dtype=np.int64), esz)
+    so = np.lexsort((cpins, pin_edge))
+    sc, se = cpins[so], pin_edge[so]
+    keep = np.ones(len(sc), dtype=bool)
+    keep[1:] = (sc[1:] != sc[:-1]) | (se[1:] != se[:-1])
+    sc, se = sc[keep], se[keep]
+    new_sz = np.bincount(se, minlength=E)
+    ptr2 = np.zeros(E + 1, dtype=np.int64)
+    np.cumsum(new_sz, out=ptr2[1:])
+    edge_map: dict[bytes, int] = {}
+    slices: list[np.ndarray] = []
+    weights: list[float] = []
+    for e in range(E):
+        if new_sz[e] < 2:
             continue
-        edge_map[pins] = edge_map.get(pins, 0.0) + float(hg.edge_weights[e])
-    edges = list(edge_map.keys())
-    weights = np.asarray([edge_map[e] for e in edges], dtype=np.float64)
-    coarse = Hypergraph.from_edges(
-        edges, num_nodes=nxt, node_weights=cw, edge_weights=weights
+        pins = sc[ptr2[e]: ptr2[e + 1]]
+        key = pins.tobytes()
+        i = edge_map.get(key)
+        if i is None:
+            edge_map[key] = len(slices)
+            slices.append(pins)
+            weights.append(float(hg.edge_weights[e]))
+        else:
+            weights[i] += float(hg.edge_weights[e])
+    cptr = np.zeros(len(slices) + 1, dtype=np.int64)
+    if slices:
+        np.cumsum([len(s) for s in slices], out=cptr[1:])
+        cnodes = np.concatenate(slices)
+    else:
+        cnodes = np.zeros(0, dtype=np.int64)
+    coarse = Hypergraph(
+        cptr, cnodes, cw, np.asarray(weights, dtype=np.float64)
     )
     return coarse, cmap
 
@@ -161,13 +206,11 @@ def _move_gains(cnt, edges, w, a):
     currently in part `a`) to every part.  gain[b]: edges where the node is
     the sole pin in `a` stop spanning `a` (gain w_e if `b` already pinned);
     edges unpinned in `b` start spanning it (loss w_e unless the sole pin
-    travels along)."""
+    travels along).  Computed as two masked vector-matrix products."""
     sub = cnt[edges]  # (d, k)
-    col_a = sub[:, a]
-    sole = col_a == 1
-    gain = ((sole[:, None] & (sub > 0)) * w[:, None]).sum(axis=0) - (
-        ((~sole)[:, None] & (sub == 0)) * w[:, None]
-    ).sum(axis=0)
+    sole = sub[:, a] == 1
+    nz = sub > 0
+    gain = (w * sole) @ nz - (w * ~sole) @ ~nz
     gain[a] = 0.0
     return gain
 
@@ -183,7 +226,17 @@ def _refine(
 ) -> np.ndarray:
     """FM-style greedy passes on the connectivity objective, with pairwise
     swaps as a fallback when capacity blocks a single move (the zero-slack
-    regime: |V| == k*C)."""
+    regime: |V| == k*C).
+
+    Hot-path shortcut (exact): a move or swap of node v can only trigger if
+    some gain[b] > 1e-12, and for non-negative edge weights that requires v
+    to be the SOLE pin of an incident edge in its own partition.  Nodes whose
+    best gain is known to be <= 1e-12 are "settled" and skipped without
+    recomputing gains or touching the RNG (the skipped iteration is a no-op
+    in the original loop too).  Settled status depends only on the pin-count
+    rows of v's incident edges — NOT on loads or feasibility — so it stays
+    valid across passes and is invalidated exactly when a pin of one of
+    those edges moves."""
     if hg.num_edges == 0 or k == 1:
         return assign
     node_ptr, node_edges = hg.incidence()
@@ -193,16 +246,38 @@ def _refine(
     part_nodes: list[set[int]] = [set() for _ in range(k)]
     for v, p in enumerate(assign):
         part_nodes[int(p)].add(v)
+    w_stream = hg.edge_weights[node_edges]
+    deg = np.diff(node_ptr)
+
+    # nodes with no sole pin in their own partition start out settled
+    col = cnt[node_edges, np.repeat(assign, deg)] == 1
+    cum = np.zeros(len(col) + 1, dtype=np.int64)
+    np.cumsum(col, out=cum[1:])
+    settled = ~(cum[node_ptr[1:]] > cum[node_ptr[:-1]])
+    cache_ok = np.ones(hg.num_nodes, dtype=bool)
+
+    def invalidate(edge_ids):
+        for e in edge_ids:
+            cache_ok[hg.edge(int(e))] = False
+
     for _ in range(passes):
         improved = False
         for v in rng.permutation(hg.num_nodes):
+            if cache_ok[v] and settled[v]:
+                continue
             edges = node_edges[node_ptr[v] : node_ptr[v + 1]]
             if len(edges) == 0:
                 continue
             a = int(assign[v])
+            if not cache_ok[v]:
+                cache_ok[v] = True
+                if not (cnt[edges, a] == 1).any():
+                    settled[v] = True
+                    continue
             wv = hg.node_weights[v]
-            w = hg.edge_weights[edges]
+            w = w_stream[node_ptr[v] : node_ptr[v + 1]]
             gain = _move_gains(cnt, edges, w, a)
+            settled[v] = bool(gain.max() <= 1e-12)
             feasible = loads + wv <= capacity
             feasible[a] = True
             move_gain = np.where(feasible, gain, -np.inf)
@@ -213,6 +288,7 @@ def _refine(
                 loads[b] += wv
                 cnt[edges, a] -= 1
                 cnt[edges, b] += 1
+                invalidate(edges)
                 part_nodes[a].discard(int(v))
                 part_nodes[b].add(int(v))
                 improved = True
@@ -248,6 +324,8 @@ def _refine(
                 eu = node_edges[node_ptr[u] : node_ptr[u + 1]]
                 cnt[eu, b] -= 1
                 cnt[eu, a] += 1
+                invalidate(edges)
+                invalidate(eu)
                 assign[v], assign[u] = b, a
                 loads[a] += hg.node_weights[u] - wv
                 loads[b] += wv - hg.node_weights[u]
@@ -318,6 +396,20 @@ def _fixup_capacity(
 
 
 # -------------------------------------------------------------------- driver
+_PARTITION_CACHE: OrderedDict[str, np.ndarray] = OrderedDict()
+_PARTITION_CACHE_MAX = 8
+
+
+def _partition_key(hg, k, capacity, seed, nruns, passes, coarsen_to) -> str:
+    h = hashlib.sha1()
+    for arr in (hg.edge_ptr, hg.edge_nodes, hg.node_weights, hg.edge_weights):
+        h.update(np.ascontiguousarray(arr).tobytes())
+    h.update(
+        repr((k, float(capacity), seed, nruns, passes, coarsen_to)).encode()
+    )
+    return h.hexdigest()
+
+
 def partition(
     hg: Hypergraph,
     k: int,
@@ -331,7 +423,11 @@ def partition(
 
     Returns assign: (V,) int64, values in [0, k).  Items with zero degree are
     balanced across parts by weight.
-    """
+
+    `partition` is a deterministic pure function of its arguments, and the
+    placement algorithms routinely issue *identical* calls (HPA / IHPA / DS
+    all start from the same N_e-way partition of the same workload), so
+    results are memoized in a small content-addressed LRU."""
     n = hg.num_nodes
     if capacity is None:
         capacity = hg.total_node_weight() / k * 1.05 + hg.node_weights.max()
@@ -343,6 +439,12 @@ def partition(
         return np.zeros(n, dtype=np.int64)
     if coarsen_to is None:
         coarsen_to = max(128, 12 * k)
+
+    key = _partition_key(hg, k, capacity, seed, nruns, passes, coarsen_to)
+    cached = _PARTITION_CACHE.get(key)
+    if cached is not None:
+        _PARTITION_CACHE.move_to_end(key)
+        return cached.copy()
 
     best_assign, best_cost = None, np.inf
     for run in range(max(1, nruns)):
@@ -367,4 +469,7 @@ def partition(
         cost = connectivity_cost(hg, assign, k)
         if cost < best_cost:
             best_cost, best_assign = cost, assign.copy()
+    _PARTITION_CACHE[key] = best_assign.copy()
+    if len(_PARTITION_CACHE) > _PARTITION_CACHE_MAX:
+        _PARTITION_CACHE.popitem(last=False)
     return best_assign

@@ -136,13 +136,21 @@ class Hypergraph:
         )
 
     # ------------------------------------------------------------ subgraphs
+    def edges_csr(self, edge_ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """CSR (ptr, nodes) of the given hyperedges, vectorized gather."""
+        edge_ids = np.asarray(edge_ids, dtype=np.int64)
+        sizes = self.edge_ptr[edge_ids + 1] - self.edge_ptr[edge_ids]
+        ptr = np.zeros(len(edge_ids) + 1, dtype=np.int64)
+        np.cumsum(sizes, out=ptr[1:])
+        total = int(ptr[-1])
+        base = np.repeat(self.edge_ptr[edge_ids], sizes)
+        off = np.arange(total, dtype=np.int64) - np.repeat(ptr[:-1], sizes)
+        return ptr, self.edge_nodes[base + off]
+
     def subhypergraph_edges(self, edge_ids: np.ndarray) -> "Hypergraph":
         """Keep the given hyperedges; node ids are preserved (no relabel)."""
         edge_ids = np.asarray(edge_ids, dtype=np.int64)
-        lists = [self.edge(int(e)) for e in edge_ids]
-        ptr = np.zeros(len(lists) + 1, dtype=np.int64)
-        ptr[1:] = np.cumsum([len(x) for x in lists])
-        nodes = np.concatenate(lists) if lists else np.zeros(0, dtype=np.int64)
+        ptr, nodes = self.edges_csr(edge_ids)
         return Hypergraph(
             ptr, nodes, self.node_weights, self.edge_weights[edge_ids]
         )

@@ -7,16 +7,55 @@ query which copy of each item to read.
 
 `Placement` is the layout object shared by every algorithm: a boolean
 membership matrix (partitions x items) plus per-partition weight accounting.
+
+Span engine
+-----------
+Two evaluation paths produce bit-identical covers:
+
+* the per-query reference (`greedy_set_cover` / `cover_for_query`): a Python
+  loop over greedy rounds, kept as the executable specification;
+* the batched bitset engine (`batched_cover_csr` / `batched_spans_csr`):
+  queries are bucketed by word count W = ceil(|q|/64) and each query's
+  membership submatrix is packed into uint64 words — ``codes[e, p, w]`` holds
+  bit j iff partition p stores the query's (64*w + j)-th pin.  One greedy
+  round for *every* still-uncovered query in the bucket is then a single
+  popcount of ``codes & remaining`` (numpy ``bitwise_count`` or the
+  JAX-jitted kernel selected by ``repro.flags.FLAGS["span_backend"]``)
+  followed by a row-wise argmax, instead of one Python loop per query.
+
+Tie-break contract: every engine picks the LOWEST partition id among
+partitions with maximal intersection gain (``np.argmax`` semantics).  The
+batched engine is exact — same chosen partitions, same selection order, same
+replica attribution, same ValueError on unplaced items — which the
+equivalence tests in ``tests/test_span_engine.py`` enforce.
+
+`SpanMaintainer` layers an incremental cache on top: per-edge covers are
+recomputed only for edges incident to items whose membership changed
+(dirty-set invalidation), which turns the inner loops of IHPA / DS / LMBR
+from O(E) full sweeps into O(touched) batched refreshes.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 
-__all__ = ["Placement", "greedy_set_cover", "cover_for_query"]
+from .. import flags as _flags
+
+__all__ = [
+    "Placement",
+    "greedy_set_cover",
+    "cover_for_query",
+    "query_span",
+    "spans_for_workload",
+    "WorkloadCover",
+    "batched_cover_csr",
+    "batched_spans_csr",
+    "SpanMaintainer",
+]
+
+_WORD = 64
 
 
 @dataclasses.dataclass
@@ -142,10 +181,255 @@ def query_span(query: np.ndarray, member: np.ndarray) -> int:
     return len(greedy_set_cover(query, member))
 
 
+# ===================================================================== engine
+def _gains_numpy(codes: np.ndarray, rem: np.ndarray) -> np.ndarray:
+    """Popcount gains: codes (A, N, W) uint64, rem (A, W) -> (A, N) int64."""
+    return np.bitwise_count(codes & rem[:, None, :]).sum(axis=2, dtype=np.int64)
+
+
+_JAX_GAIN_KERNEL = None
+
+
+def _gains_jax(codes: np.ndarray, rem: np.ndarray) -> np.ndarray:
+    """JAX-jitted gain kernel: masked popcount-reduce over the packed
+    membership (the batched analogue of a masked matmul).  Operates on uint32
+    views since jax defaults to 32-bit integer lanes.
+
+    The query-batch axis is padded to the next power of two before the jit
+    call: greedy rounds shrink the active set every iteration, and compiling
+    one XLA program per distinct batch size would otherwise dominate
+    wall-clock (and grow the compile cache without bound).  Padded rows are
+    all-zero and sliced off, so results are unchanged."""
+    global _JAX_GAIN_KERNEL
+    if _JAX_GAIN_KERNEL is None:
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+
+        @jax.jit
+        def kernel(c, r):
+            masked = jnp.bitwise_and(c, r[:, None, :])
+            return lax.population_count(masked).astype(jnp.int32).sum(axis=-1)
+
+        _JAX_GAIN_KERNEL = kernel
+    a = codes.shape[0]
+    pad = max(1, 1 << (a - 1).bit_length()) if a else 1
+    if pad != a:
+        codes = np.concatenate(
+            [codes, np.zeros((pad - a,) + codes.shape[1:], dtype=codes.dtype)]
+        )
+        rem = np.concatenate(
+            [rem, np.zeros((pad - a, rem.shape[1]), dtype=rem.dtype)]
+        )
+    c32 = np.ascontiguousarray(codes).view(np.uint32)
+    r32 = np.ascontiguousarray(rem).view(np.uint32)
+    out = np.asarray(_JAX_GAIN_KERNEL(c32, r32)).astype(np.int64)
+    return out[:a]
+
+
+def _gain_matrix(codes: np.ndarray, rem: np.ndarray) -> np.ndarray:
+    backend = _flags.FLAGS.get("span_backend", "numpy")
+    if backend == "jax":
+        try:
+            return _gains_jax(codes, rem)
+        except ImportError:  # container without jax: numpy path is the oracle
+            pass
+    return _gains_numpy(codes, rem)
+
+
+@dataclasses.dataclass
+class WorkloadCover:
+    """Batched cover of a CSR query set.
+
+    spans:       (E,) greedy cover size per query
+    cover_ptr:   (E+1,) CSR offsets into cover_parts
+    cover_parts: (sum spans,) chosen partitions in greedy selection order
+    pin_parts:   (P,) or None — for every pin of the input CSR, the partition
+                 that serves it (the replica-selection decision); aligned with
+                 the edge_nodes array the cover was computed from
+    """
+
+    spans: np.ndarray
+    cover_ptr: np.ndarray
+    cover_parts: np.ndarray
+    pin_parts: np.ndarray | None = None
+
+    def chosen(self, e: int) -> np.ndarray:
+        return self.cover_parts[self.cover_ptr[e]: self.cover_ptr[e + 1]]
+
+
+def _cover_bucket(edge_ptr, edge_nodes, member, b_idx, W, spans, pin_parts):
+    """Run batched greedy cover for one word-count bucket.  Returns the
+    per-round chosen matrix ch (B, R) with -1 padding."""
+    sizes = edge_ptr[b_idx + 1] - edge_ptr[b_idx]
+    B = len(b_idx)
+    loc_ptr = np.zeros(B + 1, dtype=np.int64)
+    np.cumsum(sizes, out=loc_ptr[1:])
+    P = int(loc_ptr[-1])
+    pin_e = np.repeat(np.arange(B, dtype=np.int64), sizes)
+    pos = np.arange(P, dtype=np.int64) - loc_ptr[pin_e]
+    pins = edge_nodes[edge_ptr[b_idx][pin_e] + pos]
+    wid = pos >> 6
+    bit = (pos & 63).astype(np.uint64)
+
+    # pack the per-query membership submatrices into uint64 words
+    shifted = member[:, pins].astype(np.uint64) << bit[None, :]  # (N, P)
+    seg = pin_e * W + wid
+    starts = np.flatnonzero(
+        np.concatenate([[True], seg[1:] != seg[:-1]])
+    )
+    codes = np.zeros((B, member.shape[0], W), dtype=np.uint64)
+    if P:
+        red = np.bitwise_or.reduceat(shifted, starts, axis=1)  # (N, G)
+        codes[pin_e[starts], :, wid[starts]] = red.T
+
+    # remaining-items masks: the low |q| bits set
+    rem = np.zeros((B, W), dtype=np.uint64)
+    for j in range(W):
+        bits = np.clip(sizes - _WORD * j, 0, _WORD)
+        low = (np.uint64(1) << bits.clip(0, _WORD - 1).astype(np.uint64)) - np.uint64(1)
+        rem[:, j] = np.where(bits >= _WORD, np.uint64(0xFFFFFFFFFFFFFFFF), low)
+
+    rounds: list[tuple[np.ndarray, np.ndarray]] = []
+    active = np.flatnonzero(rem.any(axis=1))
+    while len(active):
+        sub = codes[active]                     # (A, N, W)
+        g = _gain_matrix(sub, rem[active])      # (A, N)
+        p = g.argmax(axis=1)                    # ties -> lowest partition id
+        gmax = g[np.arange(len(p)), p]
+        if (gmax == 0).any():
+            bad = int(active[int(np.argmax(gmax == 0))])
+            e = int(b_idx[bad])
+            raise ValueError(
+                f"query {e} contains items not stored on any partition"
+            )
+        spans[b_idx[active]] += 1
+        rounds.append((active, p))
+        newly = sub[np.arange(len(p)), p]       # (A, W)
+        rem[active] &= ~newly
+        active = active[rem[active].any(axis=1)]
+
+    R = len(rounds)
+    ch = np.full((B, R), -1, dtype=np.int64)
+    for r, (ai, pi) in enumerate(rounds):
+        ch[ai, r] = pi
+
+    if pin_parts is not None and P:
+        assigned = np.full(P, -1, dtype=np.int64)
+        for r in range(R):
+            pe = ch[pin_e, r]
+            idx = np.flatnonzero((assigned < 0) & (pe >= 0))
+            if not len(idx):
+                continue
+            hit = member[pe[idx], pins[idx]]
+            sel = idx[hit]
+            assigned[sel] = pe[sel]
+        pin_parts[edge_ptr[b_idx][pin_e] + pos] = assigned
+    return ch
+
+
+def batched_cover_csr(
+    edge_ptr: np.ndarray,
+    edge_nodes: np.ndarray,
+    member: np.ndarray,
+    with_pin_parts: bool = False,
+) -> WorkloadCover:
+    """Greedy set cover of every CSR query against `member`, batched.
+
+    Bit-identical to running `cover_for_query` per query (same covers in the
+    same order, same lowest-id tie-break, ValueError on unplaced items), but
+    one popcount matrix op per greedy round per size bucket instead of E
+    Python loops.  Queries must be pin-deduplicated (Hypergraph CSR edges
+    always are)."""
+    edge_ptr = np.asarray(edge_ptr, dtype=np.int64)
+    edge_nodes = np.asarray(edge_nodes, dtype=np.int64)
+    E = len(edge_ptr) - 1
+    spans = np.zeros(E, dtype=np.int64)
+    pin_parts = (
+        np.full(len(edge_nodes), -1, dtype=np.int64) if with_pin_parts else None
+    )
+    sizes = np.diff(edge_ptr)
+    words = np.maximum((sizes + _WORD - 1) // _WORD, 1)
+    bucket_chosen: list[tuple[np.ndarray, np.ndarray]] = []
+    for W in np.unique(words[sizes > 0]) if E else []:
+        b_idx = np.flatnonzero((words == W) & (sizes > 0))
+        ch = _cover_bucket(edge_ptr, edge_nodes, member, b_idx, int(W),
+                           spans, pin_parts)
+        bucket_chosen.append((b_idx, ch))
+
+    cover_ptr = np.zeros(E + 1, dtype=np.int64)
+    np.cumsum(spans, out=cover_ptr[1:])
+    cover_parts = np.zeros(int(cover_ptr[-1]), dtype=np.int64)
+    for b_idx, ch in bucket_chosen:
+        sp = spans[b_idx]
+        total = int(sp.sum())
+        if not total:
+            continue
+        # flat (edge-major, round-minor) order matches ch[ch >= 0] row-major
+        base = np.zeros(len(b_idx) + 1, dtype=np.int64)
+        np.cumsum(sp, out=base[1:])
+        within = np.arange(total, dtype=np.int64) - base[
+            np.repeat(np.arange(len(b_idx)), sp)
+        ]
+        cover_parts[np.repeat(cover_ptr[b_idx], sp) + within] = ch[ch >= 0]
+    return WorkloadCover(spans, cover_ptr, cover_parts, pin_parts)
+
+
+def batched_spans_csr(
+    edge_ptr: np.ndarray, edge_nodes: np.ndarray, member: np.ndarray
+) -> np.ndarray:
+    """Spans only (cheapest batched path)."""
+    return batched_cover_csr(edge_ptr, edge_nodes, member).spans
+
+
 def spans_for_workload(hg, placement: Placement) -> np.ndarray:
-    """Span of every hyperedge in `hg` under `placement` (vectorized loop)."""
-    member = placement.member
-    out = np.zeros(hg.num_edges, dtype=np.int64)
-    for e in range(hg.num_edges):
-        out[e] = len(greedy_set_cover(hg.edge(e), member))
-    return out
+    """Span of every hyperedge in `hg` under `placement` (batched engine)."""
+    return batched_spans_csr(hg.edge_ptr, hg.edge_nodes, placement.member)
+
+
+# ======================================================== incremental spans
+class SpanMaintainer:
+    """Per-edge span cache with dirty-set invalidation.
+
+    Exactness contract: membership of an item only affects the covers of
+    edges containing that item, so after `notify_items(touched)` recomputing
+    just the incident (dirty) edges reproduces a full sweep bit-for-bit.
+    Callers MUST notify every item whose membership row changed."""
+
+    def __init__(self, hg, placement: Placement):
+        self.hg = hg
+        self.placement = placement
+        self._node_ptr, self._node_edges = hg.incidence()
+        self._spans = batched_spans_csr(
+            hg.edge_ptr, hg.edge_nodes, placement.member
+        )
+        self._dirty = np.zeros(hg.num_edges, dtype=bool)
+
+    def notify_items(self, items) -> None:
+        """Mark every edge incident to `items` dirty."""
+        items = np.asarray(items, dtype=np.int64)
+        if not len(items):
+            return
+        cnt = self._node_ptr[items + 1] - self._node_ptr[items]
+        total = int(cnt.sum())
+        if not total:
+            return
+        base = np.repeat(self._node_ptr[items], cnt)
+        off = np.arange(total, dtype=np.int64) - np.repeat(
+            np.concatenate([[0], np.cumsum(cnt[:-1])]), cnt
+        )
+        self._dirty[self._node_edges[base + off]] = True
+
+    def spans(self) -> np.ndarray:
+        d = np.flatnonzero(self._dirty)
+        if len(d):
+            ptr, nodes = self.hg.edges_csr(d)
+            self._spans[d] = batched_spans_csr(
+                ptr, nodes, self.placement.member
+            )
+            self._dirty[:] = False
+        return self._spans
+
+    def residual_edges(self, min_span: int) -> np.ndarray:
+        """Edge ids with span > min_span (pruneHypergraphBySpan keeps these)."""
+        return np.flatnonzero(self.spans() > min_span)

@@ -31,7 +31,7 @@ from typing import Callable
 import numpy as np
 
 from .hypergraph import Hypergraph
-from .setcover import Placement, cover_for_query
+from .setcover import Placement, batched_cover_csr
 
 __all__ = ["SimulationResult", "Simulator", "EnergyModel"]
 
@@ -120,24 +120,34 @@ class Simulator:
         if validate:
             pl.validate()
         replay = trace if trace is not None else hg
-        spans = np.zeros(replay.num_edges, dtype=np.int64)
-        access_load = np.zeros(self.n, dtype=np.float64)
-        total_energy = 0.0
-        total_shipped = 0.0
-        for e in range(replay.num_edges):
-            q = replay.edge(e)
-            chosen, accessed = cover_for_query(q, pl.member)
-            spans[e] = len(chosen)
-            for p in chosen:
-                access_load[p] += 1
-            scanned = float(hg.node_weights[q].sum()) * self.item_gb
-            # coordinator = first chosen partition; others ship their reads
-            shipped = sum(
-                float(hg.node_weights[items].sum()) * self.item_gb
-                for items in accessed[1:]
-            )
-            total_shipped += shipped
-            total_energy += self.energy.query_energy(scanned, len(chosen), shipped)
+        # one batched greedy cover for the whole trace (replica selection for
+        # every query at once); pin_parts is the per-item serving partition
+        cov = batched_cover_csr(
+            replay.edge_ptr, replay.edge_nodes, pl.member, with_pin_parts=True
+        )
+        spans = cov.spans
+        access_load = np.bincount(
+            cov.cover_parts, minlength=self.n
+        ).astype(np.float64)
+        w_pins = hg.node_weights[replay.edge_nodes]
+        cw = np.concatenate([[0.0], np.cumsum(w_pins)])
+        scanned = (cw[replay.edge_ptr[1:]] - cw[replay.edge_ptr[:-1]]) \
+            * self.item_gb
+        # coordinator = first chosen partition; others ship their reads
+        first = np.full(replay.num_edges, -1, dtype=np.int64)
+        nz = spans > 0
+        first[nz] = cov.cover_parts[cov.cover_ptr[:-1][nz]]
+        local_w = np.where(
+            cov.pin_parts == np.repeat(first, np.diff(replay.edge_ptr)),
+            w_pins, 0.0,
+        )
+        cl = np.concatenate([[0.0], np.cumsum(local_w)])
+        shipped = scanned - (cl[replay.edge_ptr[1:]] - cl[replay.edge_ptr[:-1]]) \
+            * self.item_gb
+        total_shipped = float(shipped.sum())
+        total_energy = float(
+            self.energy.query_energy(scanned, spans, shipped).sum()
+        )
         return SimulationResult(
             algorithm=name or getattr(algorithm, "__name__", "custom"),
             spans=spans,

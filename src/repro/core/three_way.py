@@ -21,7 +21,7 @@ import numpy as np
 from . import hpa as hpa_mod
 from .algorithms import _hitting_set, min_partitions
 from .hypergraph import Hypergraph
-from .setcover import Placement, greedy_set_cover
+from .setcover import Placement, batched_spans_csr, greedy_set_cover
 
 __all__ = ["pra_3way", "sda", "ihpa_3way", "random_3way", "THREE_WAY_ALGORITHMS"]
 
@@ -210,15 +210,11 @@ def ihpa_3way(
         if k <= 0:
             break
         assign = hpa_mod.partition(cur, k, capacity, seed=seed + r, nruns=nruns)
-        for v in range(hg.num_nodes):
-            pl.member[used + assign[v], v] = True
+        pl.member[used + assign, np.arange(hg.num_nodes)] = True
         used += k
-        # prune edges already at span 1 for the next round
-        keep = [
-            e for e in range(cur.num_edges)
-            if len(greedy_set_cover(cur.edge(e), pl.member)) > 1
-        ]
-        nxt = cur.subhypergraph_edges(np.asarray(keep, dtype=np.int64))
+        # prune edges already at span 1 for the next round (batched engine)
+        spans = batched_spans_csr(cur.edge_ptr, cur.edge_nodes, pl.member)
+        nxt = cur.subhypergraph_edges(np.flatnonzero(spans > 1))
         # keep all nodes (every node still gets a copy each round)
         cur = Hypergraph(
             nxt.edge_ptr, nxt.edge_nodes, hg.node_weights, nxt.edge_weights

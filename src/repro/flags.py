@@ -25,6 +25,11 @@ FLAGS = {
     "sp_attn": False,
     # MoE dispatch capacity factor override (None = config value)
     "moe_cf": None,
+    # span engine gain backend: "numpy" (bitwise_count, the oracle) or "jax"
+    # (jitted population_count kernel over the packed membership).  Both are
+    # bit-identical; numpy is the default so placement results never depend
+    # on jax being importable.
+    "span_backend": "numpy",
 }
 
 
@@ -45,10 +50,15 @@ def set_variant(spec: str):
             FLAGS["sp_attn"] = True
         elif part.startswith("cf"):
             FLAGS["moe_cf"] = float(part[2:])
+        elif part.startswith("span"):
+            backend = part[len("span"):]
+            if backend not in ("numpy", "jax"):
+                raise ValueError(f"unknown span backend {backend!r}")
+            FLAGS["span_backend"] = backend
         else:
             raise ValueError(f"unknown variant component {part!r}")
 
 
 def reset():
     FLAGS.update(mla_decomp=False, accum_steps=1, sp=False, sp_attn=False,
-                 moe_cf=None)
+                 moe_cf=None, span_backend="numpy")

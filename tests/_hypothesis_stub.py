@@ -1,0 +1,99 @@
+"""Minimal, dependency-free stand-in for the `hypothesis` API surface these
+tests use, so the property tests stay runnable in offline containers.
+
+Not a shrinking property-based tester: `given` simply reruns the test body
+`max_examples` times with a deterministically seeded numpy Generator per
+example, drawing values from the tiny strategy combinators below.  If real
+hypothesis is installed the test modules import it instead of this stub.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class _DataObject:
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy):
+        return strategy.draw(self._rng)
+
+
+class _DataStrategy(_Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: _DataObject(rng))
+
+
+class strategies:
+    """Namespace mirroring `hypothesis.strategies` (the used subset)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1))
+        )
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value))
+        )
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+              unique: bool = False) -> _Strategy:
+        def draw(rng: np.random.Generator):
+            size = int(rng.integers(min_size, max_size + 1))
+            out: list = []
+            seen: set = set()
+            attempts = 0
+            while len(out) < size and attempts < 1000:
+                attempts += 1
+                x = elements.draw(rng)
+                if unique:
+                    if x in seen:
+                        continue
+                    seen.add(x)
+                out.append(x)
+            return out
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def data() -> _Strategy:
+        return _DataStrategy()
+
+
+def settings(max_examples: int = 20, deadline=None):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies_args: _Strategy):
+    def deco(fn):
+        n = getattr(fn, "_stub_max_examples", 20)
+
+        def wrapper():
+            for ex in range(n):
+                rng = np.random.default_rng(0xC0FFEE + ex)
+                fn(*[s.draw(rng) for s in strategies_args])
+
+        # NB: deliberately no functools.wraps — pytest must see a zero-arg
+        # signature, not the example parameters of the wrapped function
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: vendored deterministic fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.hpa import connectivity_cost, partition, ubfactor
 from repro.core.hypergraph import Hypergraph

@@ -4,7 +4,11 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: vendored deterministic fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.setcover import (
     Placement, cover_for_query, greedy_set_cover, query_span,
