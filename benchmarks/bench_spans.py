@@ -48,6 +48,9 @@ def run(quick: bool = True) -> list[dict]:
         try:
             import jax  # noqa: F401
             engines.append(("batched-jax", "jax"))
+            # per-bucket dispatch (numpy below span_dispatch_threshold,
+            # accelerated above) — the default engine since PR 2
+            engines.append(("batched-auto", "auto"))
         except ImportError:
             pass
         rows.append(dict(

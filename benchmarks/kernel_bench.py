@@ -29,32 +29,72 @@ def run(quick: bool = True) -> list[dict]:
     rows = []
     key = jax.random.PRNGKey(0)
 
-    # span-gain popcount kernel (batched replica selection): jitted
-    # population_count over the packed membership vs the numpy oracle.
-    # Integer kernel -> max_err must be exactly 0.  Runs first so the span
-    # engine signal survives failures in the attention kernels below.
-    from repro.core.setcover import _gains_jax, _gains_numpy
+    # span-gain kernel (batched replica selection): the fused Pallas
+    # mask+popcount+reduce in interpret mode, the jitted jnp backend, and the
+    # numpy oracle must agree exactly (integer kernel -> max_err must be 0).
+    # Runs first so the span engine signal survives failures in the
+    # attention kernels below.
+    from repro.kernels.span_gain.ops import span_gains
+    from repro.kernels.span_gain.ref import span_gain_ref
 
     rng = np.random.default_rng(0)
     E, N, W = 4096, 35, 2  # ~ibm-scale bucket: 4k queries, 35 partitions
     codes = rng.integers(0, 2**63, size=(E, N, W), dtype=np.uint64)
     rem = rng.integers(0, 2**63, size=(E, W), dtype=np.uint64)
-    oracle = _gains_numpy(codes, rem)
-    _gains_jax(codes, rem)  # jit warmup
+    oracle = span_gain_ref(codes, rem)
+    # interpret-mode pallas at correctness scale (full scale is minutes of
+    # pure-Python grid stepping; the small slice proves the same math)
+    ei = 64
+    got_i = span_gains(codes[:ei], rem[:ei], force="interpret")
+    err = int(np.abs(got_i - oracle[:ei]).max())
+    span_gains(codes, rem, force="jax")  # jit warmup
     t0 = time.perf_counter()
-    got = _gains_jax(codes, rem)
+    got = span_gains(codes, rem, force="jax")
     t_jax = time.perf_counter() - t0
-    err = int(np.abs(got - oracle).max())
+    err = max(err, int(np.abs(got - oracle).max()))
     # one greedy round touches E*N*W words: popcount+add ~ 2 ops/word
     g_flops = 2.0 * E * N * W
     g_bytes = (E * N * W + E * W) * 8
     rows.append(dict(
-        kernel="span_gain_popcount", max_err=f"{err:.2e}",
+        kernel="span_gain", max_err=f"{err:.2e}",
         interpret_s=round(t_jax, 4),
         deploy_flops=f"{g_flops:.2e}", deploy_ai=round(g_flops / g_bytes, 2),
         mxu_bound=False,  # popcount runs on the VPU, HBM-streamed
     ))
     print(f"  {rows[-1]}", flush=True)
+
+    # dispatch-threshold calibration: numpy-vs-jax wall clock per bucket
+    # size; the crossover feeds flags.FLAGS["span_dispatch_threshold"]
+    # (auto mode sends rounds below it to numpy, above it to the
+    # accelerated backend).
+    cal_sizes = (256, 1024, 4096) if quick else (64, 256, 1024, 4096, 16384)
+    crossover = None
+    for A in cal_sizes:
+        c, r = codes[:A], rem[:A]
+        got = span_gains(c, r, force="jax")  # warm per-shape jit
+        cal_err = int(np.abs(got - oracle[:A]).max())
+        t = {}
+        for f in ("numpy", "jax"):
+            t0 = time.perf_counter()
+            for _ in range(5):
+                span_gains(c, r, force=f)
+            t[f] = (time.perf_counter() - t0) / 5
+        if crossover is None and t["jax"] < t["numpy"]:
+            crossover = A * N * W
+        rows.append(dict(
+            kernel=f"span_gain_calibration_{A}", max_err=f"{cal_err:.2e}",
+            interpret_s=round(t["jax"], 5),
+            deploy_flops=f"{2.0 * A * N * W:.2e}",
+            deploy_ai=f"numpy={t['numpy'] * 1e3:.2f}ms jax={t['jax'] * 1e3:.2f}ms",
+            mxu_bound=False,
+        ))
+    from repro import flags as _flags
+
+    found = (f"~{crossover} words" if crossover is not None
+             else f"none up to {max(cal_sizes) * N * W} words (numpy wins)")
+    print(f"  span_gain numpy->jax crossover {found} "
+          f"(flag default {_flags.FLAGS['span_dispatch_threshold']})",
+          flush=True)
 
     # flash attention: correctness + roofline terms at deployment scale
     b, h, kh, s, d = 1, 4, 2, 256, 64

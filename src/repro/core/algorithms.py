@@ -25,9 +25,7 @@ from .hypergraph import Hypergraph
 from .setcover import (
     Placement,
     SpanMaintainer,
-    batched_cover_csr,
     batched_spans_csr,
-    cover_for_query,
     greedy_set_cover,
 )
 
@@ -272,37 +270,55 @@ def pra(
 # ----------------------------------------------------- Algorithms 4+5: LMBR
 class _LMBRState:
     """Live set-cover assignment: for each edge, the partitions in its cover
-    and the items it reads from each (the 'improved' LMBR bookkeeping)."""
+    and the items it reads from each (the 'improved' LMBR bookkeeping).
+
+    Covers live in a SpanMaintainer (cover mode), so both the initial build
+    and every move's invalidation run through the batched bitset engine —
+    no per-edge greedy Python loops.  `part_edges[p]` (the edges whose cover
+    touches partition p) is held as a set, but DETERMINISTIC-ORDER is the
+    access contract: consumers never iterate raw sets, they go through
+    `shared_edges` / `union_edges`, which return edge ids ascending.  Every
+    downstream float accumulation and tie-break therefore depends only on
+    edge ids, not on Python set iteration order."""
 
     def __init__(self, hg: Hypergraph, pl: Placement):
         self.hg = hg
         self.pl = pl
-        self.edge_cover: list[dict[int, np.ndarray]] = []
-        # part_edges[p] = set of edges that access partition p
+        self.sm = SpanMaintainer(hg, pl, with_covers=True)
         self.part_edges: list[set[int]] = [set() for _ in range(pl.num_partitions)]
-        # one batched cover replaces E per-edge greedy loops; assembly below
-        # inserts edges/partitions in the exact order the per-edge loop did
-        cov = batched_cover_csr(
-            hg.edge_ptr, hg.edge_nodes, pl.member, with_pin_parts=True
-        )
         for e in range(hg.num_edges):
-            q = hg.edge_nodes[hg.edge_ptr[e]: hg.edge_ptr[e + 1]]
-            pp = cov.pin_parts[hg.edge_ptr[e]: hg.edge_ptr[e + 1]]
-            c = {int(p): q[pp == p] for p in cov.chosen(e)}
-            self.edge_cover.append(c)
-            for p in c:
+            for p in self.sm.cover(e):
                 self.part_edges[p].add(e)
 
-    def recompute_edge(self, e: int):
-        for p in self.edge_cover[e]:
-            self.part_edges[p].discard(e)
-        chosen, accessed = cover_for_query(self.hg.edge(e), self.pl.member)
-        self.edge_cover[e] = {p: items for p, items in zip(chosen, accessed)}
-        for p in chosen:
-            self.part_edges[p].add(e)
+    def cover(self, e: int) -> dict[int, np.ndarray]:
+        return self.sm.cover(e)
+
+    def shared_edges(self, src: int, dest: int) -> list[int]:
+        """Edges accessing both partitions, ascending edge id."""
+        return sorted(self.part_edges[src] & self.part_edges[dest])
+
+    def union_edges(self, src: int, dest: int) -> np.ndarray:
+        """Edges accessing either partition, ascending edge id."""
+        return np.fromiter(
+            sorted(self.part_edges[src] | self.part_edges[dest]),
+            dtype=np.int64,
+        )
+
+    def recompute_edges(self, edges: np.ndarray) -> None:
+        """Re-derive the covers of `edges` in ONE batched engine call
+        (bit-identical to per-edge cover_for_query) and resync part_edges."""
+        for e in edges:
+            e = int(e)
+            for p in self.sm.cover(e):
+                self.part_edges[p].discard(e)
+        self.sm.refresh_edges(edges)
+        for e in edges:
+            e = int(e)
+            for p in self.sm.cover(e):
+                self.part_edges[p].add(e)
 
     def spans(self) -> np.ndarray:
-        return np.asarray([len(c) for c in self.edge_cover])
+        return self.sm.spans()
 
 
 def _lmbr_max_gain(state: _LMBRState, src: int, dest: int):
@@ -314,7 +330,7 @@ def _lmbr_max_gain(state: _LMBRState, src: int, dest: int):
     free pins (cost 0, never peeled) — the weighted generalization of the
     paper's getKDensestNodes accounting."""
     hg, pl = state.hg, state.pl
-    shared = state.part_edges[src] & state.part_edges[dest]
+    shared = state.shared_edges(src, dest)  # ascending edge id, deterministic
     if not shared:
         return 0.0, None
     c_dest = pl.free_space(dest)
@@ -326,12 +342,12 @@ def _lmbr_max_gain(state: _LMBRState, src: int, dest: int):
     proj: list[tuple[float, list[int]]] = []  # (edge_weight, costly pins)
     total_benefit = 0.0
     for e in shared:
-        items = state.edge_cover[e].get(src)
+        items = state.cover(e).get(src)
         if items is None or not len(items):
             continue
         costly = [int(v) for v in items if not dest_row[v]]
         if not costly:
-            continue  # free benefit is claimed lazily by recompute_edge
+            continue  # free benefit is claimed lazily by recompute_edges
         we = float(hg.edge_weights[e])
         proj.append((we, costly))
         total_benefit += we
@@ -347,7 +363,9 @@ def _lmbr_max_gain(state: _LMBRState, src: int, dest: int):
             deg[v] += we
     alive_nodes = set(inc)
     alive_edge = [True] * len(proj)
-    total_w = sum(float(node_w[v]) for v in alive_nodes)
+    # accumulate in inc insertion order (first-encounter over the ascending
+    # shared-edge scan) — never in set iteration order
+    total_w = sum(float(node_w[v]) for v in inc)
     heap = [(d, v) for v, d in deg.items()]
     heapq.heapify(heap)
     best_gain, best_items = 0.0, None
@@ -442,24 +460,17 @@ def lmbr(
         # apply the move: copy items into dest
         pl.member[dest, items] = True
         moves += 1
-        # recompute covers of edges that might benefit (those reading src
-        # and touching dest or any moved item).  The candidate scan is
-        # vectorized; `affected` is still built by inserting in the union
-        # set's iteration order, so downstream set iteration (and therefore
-        # every float accumulation) matches the per-edge loop exactly.
-        cand = list(state.part_edges[src] | state.part_edges[dest])
-        affected = set()
-        if cand:
-            cand_arr = np.asarray(cand, dtype=np.int64)
+        # recompute covers of edges that might benefit (those accessing src
+        # or dest and touching a moved item) — ONE batched engine call over
+        # the ascending-id affected set; per-edge covers are independent, so
+        # refresh order cannot influence results.
+        cand_arr = state.union_edges(src, dest)
+        if len(cand_arr):
             ptr, nodes_ = hg.edges_csr(cand_arr)
             hit = np.isin(nodes_, items)
             ch = np.concatenate([[0], np.cumsum(hit)])
             touches = ch[ptr[1:]] > ch[ptr[:-1]]
-            for e, t in zip(cand, touches):
-                if t:
-                    affected.add(e)
-        for e in affected:
-            state.recompute_edge(e)
+            state.recompute_edges(cand_arr[touches])
         # refresh PQ entries involving dest (Algorithm 4 lines 12-15)
         for g in range(n):
             if g != dest:

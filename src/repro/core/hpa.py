@@ -18,6 +18,7 @@ uncoarsening level, (4) capacity fixup.
 
 from __future__ import annotations
 
+import contextlib
 import hashlib
 from collections import OrderedDict
 
@@ -25,7 +26,7 @@ import numpy as np
 
 from .hypergraph import Hypergraph
 
-__all__ = ["partition", "connectivity_cost", "ubfactor"]
+__all__ = ["partition", "connectivity_cost", "ubfactor", "fresh_partition_cache"]
 
 _MAX_EDGE_FOR_MATCH = 64  # skip huge hyperedges during matching (hMETIS-like)
 
@@ -398,6 +399,26 @@ def _fixup_capacity(
 # -------------------------------------------------------------------- driver
 _PARTITION_CACHE: OrderedDict[str, np.ndarray] = OrderedDict()
 _PARTITION_CACHE_MAX = 8
+
+
+@contextlib.contextmanager
+def fresh_partition_cache():
+    """Scope the partition memo: run the body against an empty cache, then
+    restore the previous one.
+
+    `partition` is a pure function, so the memo never changes placements —
+    only who gets billed for shared work.  Benchmarks that time algorithms
+    individually (Simulator.run) enter this scope so each algorithm pays for
+    its own partition calls instead of free-riding on whichever algorithm
+    ran first; the memo still dedups identical calls *within* one run (e.g.
+    IHPA's repeated base partition)."""
+    global _PARTITION_CACHE
+    saved = _PARTITION_CACHE
+    _PARTITION_CACHE = OrderedDict()
+    try:
+        yield
+    finally:
+        _PARTITION_CACHE = saved
 
 
 def _partition_key(hg, k, capacity, seed, nruns, passes, coarsen_to) -> str:

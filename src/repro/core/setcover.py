@@ -19,9 +19,12 @@ Two evaluation paths produce bit-identical covers:
   membership submatrix is packed into uint64 words — ``codes[e, p, w]`` holds
   bit j iff partition p stores the query's (64*w + j)-th pin.  One greedy
   round for *every* still-uncovered query in the bucket is then a single
-  popcount of ``codes & remaining`` (numpy ``bitwise_count`` or the
-  JAX-jitted kernel selected by ``repro.flags.FLAGS["span_backend"]``)
-  followed by a row-wise argmax, instead of one Python loop per query.
+  popcount of ``codes & remaining`` followed by a row-wise argmax, instead
+  of one Python loop per query.  The popcount backend is chosen PER BUCKET
+  ROUND by ``_gain_matrix``: numpy ``bitwise_count`` below
+  ``repro.flags.FLAGS["span_dispatch_threshold"]`` words, the accelerated
+  path (Pallas span_gain kernel on TPU, jitted jnp elsewhere) above it;
+  ``FLAGS["span_backend"]`` pins one backend globally instead.
 
 Tie-break contract: every engine picks the LOWEST partition id among
 partitions with maximal intersection gain (``np.argmax`` semantics).  The
@@ -187,54 +190,52 @@ def _gains_numpy(codes: np.ndarray, rem: np.ndarray) -> np.ndarray:
     return np.bitwise_count(codes & rem[:, None, :]).sum(axis=2, dtype=np.int64)
 
 
-_JAX_GAIN_KERNEL = None
+_ACCEL_BACKEND = None  # resolved once: "pallas" on TPU, "jax" elsewhere
 
 
-def _gains_jax(codes: np.ndarray, rem: np.ndarray) -> np.ndarray:
-    """JAX-jitted gain kernel: masked popcount-reduce over the packed
-    membership (the batched analogue of a masked matmul).  Operates on uint32
-    views since jax defaults to 32-bit integer lanes.
+def _accel_backend() -> str | None:
+    """Pick the accelerated gain backend available on this host (None if jax
+    is missing or fails to initialize — the numpy oracle then serves every
+    bucket; all backends are bit-identical, so this only costs speed)."""
+    global _ACCEL_BACKEND
+    if _ACCEL_BACKEND is None:
+        try:
+            import jax
 
-    The query-batch axis is padded to the next power of two before the jit
-    call: greedy rounds shrink the active set every iteration, and compiling
-    one XLA program per distinct batch size would otherwise dominate
-    wall-clock (and grow the compile cache without bound).  Padded rows are
-    all-zero and sliced off, so results are unchanged."""
-    global _JAX_GAIN_KERNEL
-    if _JAX_GAIN_KERNEL is None:
-        import jax
-        import jax.numpy as jnp
-        from jax import lax
-
-        @jax.jit
-        def kernel(c, r):
-            masked = jnp.bitwise_and(c, r[:, None, :])
-            return lax.population_count(masked).astype(jnp.int32).sum(axis=-1)
-
-        _JAX_GAIN_KERNEL = kernel
-    a = codes.shape[0]
-    pad = max(1, 1 << (a - 1).bit_length()) if a else 1
-    if pad != a:
-        codes = np.concatenate(
-            [codes, np.zeros((pad - a,) + codes.shape[1:], dtype=codes.dtype)]
-        )
-        rem = np.concatenate(
-            [rem, np.zeros((pad - a, rem.shape[1]), dtype=rem.dtype)]
-        )
-    c32 = np.ascontiguousarray(codes).view(np.uint32)
-    r32 = np.ascontiguousarray(rem).view(np.uint32)
-    out = np.asarray(_JAX_GAIN_KERNEL(c32, r32)).astype(np.int64)
-    return out[:a]
+            _ACCEL_BACKEND = (
+                "pallas" if jax.default_backend() == "tpu" else "jax"
+            )
+        except Exception:  # no jax, or a broken accelerator runtime
+            _ACCEL_BACKEND = "none"
+    return None if _ACCEL_BACKEND == "none" else _ACCEL_BACKEND
 
 
 def _gain_matrix(codes: np.ndarray, rem: np.ndarray) -> np.ndarray:
-    backend = _flags.FLAGS.get("span_backend", "numpy")
-    if backend == "jax":
-        try:
-            return _gains_jax(codes, rem)
-        except ImportError:  # container without jax: numpy path is the oracle
-            pass
-    return _gains_numpy(codes, rem)
+    """Per-bucket backend dispatch for one greedy round.
+
+    Every backend is bit-exact (integer popcount), so this is purely a
+    performance decision: each call covers one (bucket, round) with
+    codes.size = A * N * W words of gain work.  Small rounds stay on numpy
+    (crossing into jax costs more than the popcount); rounds past the
+    calibrated span_dispatch_threshold run on the accelerated backend — the
+    Pallas span_gain kernel on TPU, the jitted jnp popcount elsewhere.
+    """
+    backend = _flags.FLAGS.get("span_backend", "auto")
+    if backend == "auto":
+        thresh = int(_flags.FLAGS.get("span_dispatch_threshold", 48_000))
+        backend = "numpy" if codes.size < thresh else (
+            _accel_backend() or "numpy"
+        )
+    if backend == "numpy":
+        return _gains_numpy(codes, rem)
+    try:
+        from ..kernels.span_gain.ops import span_gains
+
+        return span_gains(codes, rem, force=backend)
+    except Exception:
+        # no jax / broken accelerator runtime: the numpy oracle is
+        # bit-identical, so degrade silently to it rather than fail placement
+        return _gains_numpy(codes, rem)
 
 
 @dataclasses.dataclass
@@ -394,16 +395,68 @@ class SpanMaintainer:
     Exactness contract: membership of an item only affects the covers of
     edges containing that item, so after `notify_items(touched)` recomputing
     just the incident (dirty) edges reproduces a full sweep bit-for-bit.
-    Callers MUST notify every item whose membership row changed."""
+    Callers MUST notify every item whose membership row changed.
 
-    def __init__(self, hg, placement: Placement):
+    With ``with_covers=True`` the maintainer additionally keeps every edge's
+    full replica selection — ``cover(e)`` maps each chosen partition (in
+    greedy selection order) to the items the edge reads from it — and
+    ``refresh_edges`` re-derives an explicit edge set in one batched cover
+    instead of per-edge Python loops.  This is the LMBR consumption path:
+    LMBR's move loop invalidates an algorithm-defined edge set (narrower
+    than the full incidence of the moved items), so it bypasses the dirty
+    set and names its edges directly."""
+
+    def __init__(self, hg, placement: Placement, with_covers: bool = False):
         self.hg = hg
         self.placement = placement
         self._node_ptr, self._node_edges = hg.incidence()
-        self._spans = batched_spans_csr(
-            hg.edge_ptr, hg.edge_nodes, placement.member
-        )
+        self._covers: list[dict[int, np.ndarray]] | None = None
+        if with_covers:
+            cov = batched_cover_csr(
+                hg.edge_ptr, hg.edge_nodes, placement.member,
+                with_pin_parts=True,
+            )
+            self._spans = cov.spans
+            self._covers = self._cover_dicts(
+                cov, hg.edge_ptr, hg.edge_nodes
+            )
+        else:
+            self._spans = batched_spans_csr(
+                hg.edge_ptr, hg.edge_nodes, placement.member
+            )
         self._dirty = np.zeros(hg.num_edges, dtype=bool)
+
+    @staticmethod
+    def _cover_dicts(cov: "WorkloadCover", ptr, nodes):
+        """Per-edge {partition: accessed items} dicts, partitions in greedy
+        selection order (dict insertion order == cover_for_query order)."""
+        out = []
+        for i in range(len(ptr) - 1):
+            q = nodes[ptr[i]: ptr[i + 1]]
+            pp = cov.pin_parts[ptr[i]: ptr[i + 1]]
+            out.append({int(p): q[pp == p] for p in cov.chosen(i)})
+        return out
+
+    def cover(self, e: int) -> dict[int, np.ndarray]:
+        """Replica selection of edge e (requires with_covers=True)."""
+        return self._covers[e]
+
+    def refresh_edges(self, edge_ids) -> None:
+        """Batched recompute of exactly `edge_ids` — bit-identical to calling
+        `cover_for_query` per edge, one engine invocation total."""
+        edge_ids = np.asarray(edge_ids, dtype=np.int64)
+        if not len(edge_ids):
+            return
+        ptr, nodes = self.hg.edges_csr(edge_ids)
+        cov = batched_cover_csr(
+            ptr, nodes, self.placement.member,
+            with_pin_parts=self._covers is not None,
+        )
+        self._spans[edge_ids] = cov.spans
+        if self._covers is not None:
+            for i, d in enumerate(self._cover_dicts(cov, ptr, nodes)):
+                self._covers[int(edge_ids[i])] = d
+        self._dirty[edge_ids] = False
 
     def notify_items(self, items) -> None:
         """Mark every edge incident to `items` dirty."""
@@ -423,10 +476,13 @@ class SpanMaintainer:
     def spans(self) -> np.ndarray:
         d = np.flatnonzero(self._dirty)
         if len(d):
-            ptr, nodes = self.hg.edges_csr(d)
-            self._spans[d] = batched_spans_csr(
-                ptr, nodes, self.placement.member
-            )
+            if self._covers is not None:
+                self.refresh_edges(d)  # keeps covers consistent with spans
+            else:
+                ptr, nodes = self.hg.edges_csr(d)
+                self._spans[d] = batched_spans_csr(
+                    ptr, nodes, self.placement.member
+                )
             self._dirty[:] = False
         return self._spans
 

@@ -25,11 +25,20 @@ FLAGS = {
     "sp_attn": False,
     # MoE dispatch capacity factor override (None = config value)
     "moe_cf": None,
-    # span engine gain backend: "numpy" (bitwise_count, the oracle) or "jax"
-    # (jitted population_count kernel over the packed membership).  Both are
-    # bit-identical; numpy is the default so placement results never depend
-    # on jax being importable.
-    "span_backend": "numpy",
+    # span engine gain backend.  "auto" (default) dispatches per bucket: gain
+    # rounds whose word count is below span_dispatch_threshold run on numpy
+    # (bitwise_count, the oracle), larger ones on the accelerated path (the
+    # Pallas span_gain kernel on TPU, the jitted jnp popcount elsewhere).
+    # "numpy" / "jax" / "pallas" pin one backend globally.  Every backend is
+    # bit-identical, so the flag is purely a performance knob and placement
+    # results never depend on jax being importable.
+    "span_backend": "auto",
+    # auto-dispatch crossover, in gain-matrix words (A * N * W) per greedy
+    # round.  Calibrated by benchmarks/kernel_bench.py (span_gain_calibration
+    # rows): on this container numpy's bitwise_count wins below ~30-70k words
+    # and the jitted backend past that (dispatch + uint32-view overhead
+    # amortized), so the default sits mid-band.
+    "span_dispatch_threshold": 48_000,
 }
 
 
@@ -50,9 +59,11 @@ def set_variant(spec: str):
             FLAGS["sp_attn"] = True
         elif part.startswith("cf"):
             FLAGS["moe_cf"] = float(part[2:])
+        elif part.startswith("spanth"):
+            FLAGS["span_dispatch_threshold"] = int(part[len("spanth"):])
         elif part.startswith("span"):
             backend = part[len("span"):]
-            if backend not in ("numpy", "jax"):
+            if backend not in ("auto", "numpy", "jax", "pallas"):
                 raise ValueError(f"unknown span backend {backend!r}")
             FLAGS["span_backend"] = backend
         else:
@@ -61,4 +72,5 @@ def set_variant(spec: str):
 
 def reset():
     FLAGS.update(mla_decomp=False, accum_steps=1, sp=False, sp_attn=False,
-                 moe_cf=None, span_backend="numpy")
+                 moe_cf=None, span_backend="auto",
+                 span_dispatch_threshold=48_000)

@@ -1,0 +1,21 @@
+"""Pallas API drift shims shared by every kernel package.
+
+The pallas TPU surface renamed ``TPUCompilerParams`` to ``CompilerParams``
+across jax releases; the kernels must lower on both spellings (the container
+pins one, CI images may pin the other).
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(
+    pltpu, "TPUCompilerParams", getattr(pltpu, "CompilerParams", None)
+)
+
+
+def _compiler_params(**kwargs):
+    """Build TPU compiler params under whichever name this jax exposes."""
+    if _CompilerParams is None:  # pallas without a TPU lowering at all
+        return None
+    return _CompilerParams(**kwargs)

@@ -1,0 +1,25 @@
+"""Oracles for the span-gain kernel.
+
+``span_gain_ref`` is the numpy popcount the whole span engine is specified
+against (bit-exact integer math, no jax required).  ``span_gain_jnp`` is the
+same contraction in jnp — it backs the "jax" dispatch tier and is what the
+interpret-mode Pallas kernel is asserted against in tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def span_gain_ref(codes: np.ndarray, rem: np.ndarray) -> np.ndarray:
+    """codes (A, N, W) uint64, rem (A, W) uint64 -> gains (A, N) int64."""
+    return np.bitwise_count(codes & rem[:, None, :]).sum(axis=2, dtype=np.int64)
+
+
+def span_gain_jnp(c32, r32):
+    """uint32-lane jnp reference: c32 (A, N, W2), r32 (A, W2) -> (A, N) int32."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    masked = jnp.bitwise_and(c32, r32[:, None, :])
+    return lax.population_count(masked).astype(jnp.int32).sum(axis=-1)

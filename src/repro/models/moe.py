@@ -27,6 +27,20 @@ from repro.parallel import constrain
 
 from .layers import dense_init
 
+
+def _shard_map(body, *, mesh, in_specs, out_specs):
+    """Replication checking was renamed check_rep -> check_vma when shard_map
+    graduated from jax.experimental to jax.shard_map; disable it under either
+    spelling (the MoE body mixes replicated aux losses with sharded tokens,
+    which the checker rejects)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
 __all__ = ["init_moe", "apply_moe", "identity_dispatch", "MoEDispatch"]
 
 
@@ -341,12 +355,11 @@ def _apply_moe_shard_map(params, cfg, x, dispatch, mesh, capacity_factor):
         dropf = jax.lax.pmean(dropf, axes)
         return y_full, dict(lb_loss=lb, z_loss=zl, drop_frac=dropf)
 
-    y, aux = jax.shard_map(
+    y, aux = _shard_map(
         body, mesh=mesh,
         in_specs=(in_param_specs, P(dp, None, None)),
         out_specs=(P(dp, None, None),
                    dict(lb_loss=P(), z_loss=P(), drop_frac=P())),
-        check_vma=False,
     )(params, x)
     return y, aux
 

@@ -110,6 +110,65 @@ def test_energy_tracks_span(workload):
     assert r_lmbr.energy_joules < r_rand.energy_joules
 
 
+def test_lmbr_deterministic_across_runs(workload):
+    """part_edges is consumed in ascending-edge-id order (never raw set
+    iteration order), so two runs are bit-identical placements."""
+    hg = workload.hypergraph
+    a = lmbr(hg, 10, 25, seed=0)
+    b = lmbr(hg, 10, 25, seed=0)
+    np.testing.assert_array_equal(a.member, b.member)
+
+
+def test_lmbr_state_matches_per_edge_reference(workload):
+    """The rewritten _LMBRState (batched engine via SpanMaintainer) keeps
+    covers and part_edges bit-identical to the per-edge reference across a
+    sequence of membership mutations + batched recomputes, and its
+    shared/union accessors pin the ascending-id order contract."""
+    from repro.core.algorithms import _LMBRState, _assign_to_placement
+    from repro.core.setcover import cover_for_query
+    from repro.core import hpa_partition
+
+    hg = workload.hypergraph
+    assign = hpa_partition(hg, 10, 25, seed=0, nruns=2)
+    pl = _assign_to_placement(hg, assign, 10, 100.0)
+    state = _LMBRState(hg, pl)
+    rng = np.random.default_rng(2)
+
+    def check():
+        part_edges_ref = [set() for _ in range(pl.num_partitions)]
+        for e in range(hg.num_edges):
+            chosen, accessed = cover_for_query(hg.edge(e), pl.member)
+            cov = state.cover(e)
+            assert list(cov) == chosen
+            for p, its in zip(chosen, accessed):
+                np.testing.assert_array_equal(cov[p], its)
+            for p in chosen:
+                part_edges_ref[p].add(e)
+        assert [set(s) for s in state.part_edges] == part_edges_ref
+        for src in range(pl.num_partitions):
+            for dest in range(pl.num_partitions):
+                sh = state.shared_edges(src, dest)
+                assert sh == sorted(part_edges_ref[src] & part_edges_ref[dest])
+                un = state.union_edges(src, dest)
+                np.testing.assert_array_equal(
+                    un, sorted(part_edges_ref[src] | part_edges_ref[dest])
+                )
+
+    check()
+    for _ in range(4):
+        items = rng.choice(hg.num_nodes, size=int(rng.integers(1, 6)),
+                           replace=False)
+        pl.member[int(rng.integers(0, pl.num_partitions)), items] = True
+        # recompute every edge touching a mutated item (superset of LMBR's
+        # own affected set; exactness must hold for any explicit edge set)
+        node_ptr, node_edges = hg.incidence()
+        touched = np.unique(np.concatenate(
+            [node_edges[node_ptr[v]: node_ptr[v + 1]] for v in items]
+        ))
+        state.recompute_edges(touched)
+        check()
+
+
 # ------------------------------------------------------------------- 3-way
 @pytest.mark.parametrize("name", list(THREE_WAY_ALGORITHMS))
 def test_three_way_exact_rf(name):

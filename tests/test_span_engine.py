@@ -155,5 +155,56 @@ def test_jax_backend_matches_numpy():
 def test_span_backend_variant_flag():
     flags.set_variant("spanjax")
     assert flags.FLAGS["span_backend"] == "jax"
+    flags.set_variant("spanpallas+spanth12345")
+    assert flags.FLAGS["span_backend"] == "pallas"
+    assert flags.FLAGS["span_dispatch_threshold"] == 12345
     flags.reset()
-    assert flags.FLAGS["span_backend"] == "numpy"
+    # auto = per-bucket dispatch (numpy below the threshold, accelerated
+    # above); every backend is bit-identical so the default is purely perf
+    assert flags.FLAGS["span_backend"] == "auto"
+    assert flags.FLAGS["span_dispatch_threshold"] == 48_000
+
+
+def test_auto_dispatch_threshold_boundaries():
+    """auto mode is exact at both extremes of the threshold: everything on
+    numpy (huge threshold) and everything accelerated (threshold 0)."""
+    rng = np.random.default_rng(3)
+    hg, member, _ = random_instance(rng)
+    flags.FLAGS["span_backend"] = "numpy"
+    try:
+        ref = batched_spans_csr(hg.edge_ptr, hg.edge_nodes, member)
+    finally:
+        flags.reset()
+    for thresh in (0, 1 << 60):
+        flags.FLAGS.update(span_backend="auto",
+                           span_dispatch_threshold=thresh)
+        try:
+            got = batched_spans_csr(hg.edge_ptr, hg.edge_nodes, member)
+        finally:
+            flags.reset()
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_maintainer_cover_mode_matches_reference():
+    """SpanMaintainer(with_covers=True): covers after refresh_edges equal
+    per-edge cover_for_query across membership mutations."""
+    rng = np.random.default_rng(17)
+    hg, member, _ = random_instance(rng)
+    pl = Placement(member.copy(), capacity=1e9,
+                   node_weights=np.ones(hg.num_nodes))
+    sm = SpanMaintainer(hg, pl, with_covers=True)
+    for _ in range(5):
+        items = rng.choice(hg.num_nodes, size=int(rng.integers(1, 5)),
+                           replace=False)
+        pl.member[int(rng.integers(0, pl.num_partitions)), items] = True
+        sm.refresh_edges(np.arange(hg.num_edges))
+        for e in range(hg.num_edges):
+            chosen, accessed = cover_for_query(hg.edge(e), pl.member)
+            cov = sm.cover(e)
+            assert list(cov) == chosen  # same partitions, selection order
+            for p, its in zip(chosen, accessed):
+                np.testing.assert_array_equal(cov[p], its)
+        np.testing.assert_array_equal(
+            sm.spans(),
+            batched_spans_csr(hg.edge_ptr, hg.edge_nodes, pl.member),
+        )
