@@ -1,23 +1,29 @@
 # Shared gates for every PR: run the same commands CI / the next session runs.
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast bench-smoke bench ci
+.PHONY: test test-fast bench-smoke bench ci docs-check
 
 # tier-1 verify (ROADMAP contract) — fully green since PR 2 fixed the
 # seed's jax/pallas API drift; keep it that way.
 test:
 	$(PY) -m pytest -x -q
 
-# the PR gate: fast tests + the cheap span-engine perf signal
-ci: test-fast bench-smoke
+# the PR gate: fast tests + cheap engine perf signals + honest docs
+ci: test-fast bench-smoke docs-check
+
+# README/ARCHITECTURE/benchmarks docs: snippets run, commands and flag
+# names exist (tools/docs_check.py)
+docs-check:
+	$(PY) tools/docs_check.py
 
 # skip the slow end-to-end train/distribution tests
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
-# cheap perf signal: span engine old-vs-new timings (BENCH_spans.json)
+# cheap perf signal: span engine + LMBR move engine old-vs-new timings
+# (BENCH_spans.json, BENCH_lmbr.json)
 bench-smoke:
-	$(PY) -m benchmarks.run --only bench_spans
+	$(PY) -m benchmarks.run --only bench_spans,bench_lmbr
 
 # full quick benchmark suite (all paper figures, single seed)
 bench:

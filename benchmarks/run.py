@@ -21,6 +21,7 @@ SECTIONS = [
     ("fig8_tpch", "fig8: TPC-H heterogeneous item sizes"),
     ("fig9_ispd", "fig9: ISPD98-like circuit hypergraphs"),
     ("bench_spans", "span engine: reference loop vs batched bitset (+jax)"),
+    ("bench_lmbr", "LMBR move engine: reference peel vs vectorized + cache"),
     ("placement_applications", "framework: MoE experts / shards / checkpoints"),
     ("kernel_bench", "Pallas kernels vs jnp oracles (CPU interpret)"),
     ("roofline_table", "roofline terms from dry-run artifacts"),

@@ -46,9 +46,11 @@ from .three_way import (  # noqa: F401
 )
 from .simulator import EnergyModel, SimulationResult, Simulator  # noqa: F401
 from .workloads import (  # noqa: F401
+    LMBR_STRESS_DEFAULTS,
     PAPER_DEFAULTS,
     Workload,
     ispd_like_workload,
+    lmbr_stress_workload,
     random_workload,
     snowflake_workload,
     tpch_heterogeneous,

@@ -20,6 +20,7 @@ from typing import Callable
 
 import numpy as np
 
+from .. import flags as _flags
 from . import hpa as hpa_mod
 from .hypergraph import Hypergraph
 from .setcover import (
@@ -36,7 +37,9 @@ __all__ = [
 
 
 def min_partitions(hg: Hypergraph, capacity: float) -> int:
-    """N_e = ceil(total item weight / C)."""
+    """N_e = ceil(total item weight / C): the minimum number of partitions
+    that can hold one copy of every item (exact up to the 1e-9 guard against
+    float round-up on integer-weight workloads)."""
     return int(np.ceil(hg.total_node_weight() / capacity - 1e-9))
 
 
@@ -54,7 +57,8 @@ def random_placement(
     hg: Hypergraph, n: int, capacity: float, seed: int = 0, **_
 ) -> Placement:
     """Place every item once at random, then fill all remaining space with
-    random replicas (the paper's Random baseline uses all available space)."""
+    random replicas (the paper's Random baseline uses all available space).
+    Deterministic for a given `seed` (single `default_rng` stream)."""
     rng = np.random.default_rng(seed)
     pl = Placement.empty(n, hg.num_nodes, capacity, hg.node_weights)
     loads = np.zeros(n, dtype=np.float64)
@@ -102,6 +106,15 @@ def _residual_edges(hg: Hypergraph, pl: Placement, min_span: int) -> np.ndarray:
 def ihpa(
     hg: Hypergraph, n: int, capacity: float, seed: int = 0, nruns: int = 2, **_
 ) -> Placement:
+    """Algorithm 1, Iterative HPA: partition, then repeatedly re-partition
+    the residual hypergraph (edges with span > 1) into the spare partitions,
+    replicating its items.
+
+    Exactness/determinism: residual spans come from the batched engine via
+    an incremental SpanMaintainer (bit-identical to per-edge greedy cover,
+    ties -> lowest partition id); when the residual must shrink (§4.2),
+    lowest-span hyperedges are dropped in stable ascending-span order, so
+    repeated runs with one seed produce identical placements."""
     ne = min_partitions(hg, capacity)
     assign = hpa_mod.partition(hg, ne, capacity, seed=seed, nruns=nruns)
     pl = _assign_to_placement(hg, assign, n, capacity)
@@ -158,6 +171,13 @@ def ihpa(
 def ds(
     hg: Hypergraph, n: int, capacity: float, seed: int = 0, nruns: int = 2, **_
 ) -> Placement:
+    """Algorithm 2, Dense-Subgraph based: fill each spare partition with the
+    densest capacity-bounded node set of the current residual hypergraph.
+
+    Exactness/determinism: the peel inside `k_densest_nodes` removes the
+    lowest-degree node first, ties -> lowest node id (heap order), and
+    residual spans come from the batched engine — repeated runs with one
+    seed are bit-identical."""
     ne = min_partitions(hg, capacity)
     assign = hpa_mod.partition(hg, ne, capacity, seed=seed, nruns=nruns)
     pl = _assign_to_placement(hg, assign, n, capacity)
@@ -196,6 +216,16 @@ def _hitting_set(sets: list[list[int]]) -> list[int]:
 def pra(
     hg: Hypergraph, n: int, capacity: float, seed: int = 0, nruns: int = 2, **_
 ) -> Placement:
+    """Algorithm 3, Pre-Replication: score items by how often they are the
+    sole partition-local member of an edge, then clone high scorers across
+    the partitions their edges must visit anyway (greedy hitting sets), and
+    re-partition the rewired hypergraph.
+
+    Exactness/determinism: scores accumulate in edge-major CSR order
+    (matching the original per-edge loop); items are processed in stable
+    descending-score order (ties -> lowest item id via stable argsort); the
+    hitting-set greedy picks the most frequent element, ties -> LOWEST
+    element id (`max` on (count, -id))."""
     ne = min_partitions(hg, capacity)
     assign = hpa_mod.partition(hg, ne, capacity, seed=seed, nruns=nruns)
     pl0 = _assign_to_placement(hg, assign, ne, capacity)
@@ -274,66 +304,193 @@ class _LMBRState:
 
     Covers live in a SpanMaintainer (cover mode), so both the initial build
     and every move's invalidation run through the batched bitset engine —
-    no per-edge greedy Python loops.  `part_edges[p]` (the edges whose cover
-    touches partition p) is held as a set, but DETERMINISTIC-ORDER is the
-    access contract: consumers never iterate raw sets, they go through
-    `shared_edges` / `union_edges`, which return edge ids ascending.  Every
-    downstream float accumulation and tie-break therefore depends only on
-    edge ids, not on Python set iteration order."""
+    no per-edge greedy Python loops.  The partition <-> edge incidence is a
+    boolean matrix ``_edge_mask[p, e]`` (True iff e's cover touches p), so
+    ``shared_edges`` / ``union_edges`` are single AND/OR + flatnonzero ops
+    and edge ids come out ascending by construction.  DETERMINISTIC-ORDER is
+    the access contract: every downstream float accumulation and tie-break
+    depends only on edge ids, never on Python set iteration order.
+
+    Epoch-keyed gain cache
+    ----------------------
+    ``max_gain(src, dest)`` memoizes Algorithm 5's (gain, items) per ordered
+    pair, stamped with three epochs it is a pure function of:
+
+      * ``cov_epoch[p]``  — bumped by ``recompute_edges`` for every partition
+        that gained or lost a pin attribution (the old and new serving
+        partitions of every changed pin; a superset of all part_edges /
+        cover-content changes, since both are functions of pin attribution);
+      * ``mem_epoch[d]``  — bumped by ``apply_move`` when d's membership row
+        (and hence its free space and the free-pin mask) changes.
+
+    A cached (src, dest) entry is valid iff cov_epoch[src], cov_epoch[dest]
+    and mem_epoch[dest] are all unchanged — then the recompute is skipped
+    and the cached result is returned verbatim (bit-identical by purity).
+    This collapses the O(N^2)-per-move rescan of Algorithm 4's refresh loop
+    to the touched frontier: pairs whose covers, shared sets, and destination
+    row did not change never re-peel.
+
+    Mutation contract: membership changes MUST go through ``apply_move`` (or
+    epochs go stale and the cache may serve outdated gains; direct
+    ``pl.member`` writes are only safe with the cache unused)."""
 
     def __init__(self, hg: Hypergraph, pl: Placement):
         self.hg = hg
         self.pl = pl
         self.sm = SpanMaintainer(hg, pl, with_covers=True)
-        self.part_edges: list[set[int]] = [set() for _ in range(pl.num_partitions)]
-        for e in range(hg.num_edges):
-            for p in self.sm.cover(e):
-                self.part_edges[p].add(e)
+        n, E = pl.num_partitions, hg.num_edges
+        self._edge_mask = np.zeros((n, E), dtype=bool)
+        if E:
+            counts = np.fromiter(
+                (len(self.sm.chosen(e)) for e in range(E)), dtype=np.int64,
+                count=E,
+            )
+            parts = (
+                np.concatenate([self.sm.chosen(e) for e in range(E)])
+                if counts.sum() else np.zeros(0, dtype=np.int64)
+            )
+            self._edge_mask[parts, np.repeat(np.arange(E), counts)] = True
+        self.cov_epoch = np.zeros(n, dtype=np.int64)
+        self.mem_epoch = np.zeros(n, dtype=np.int64)
+        self._loads = pl.partition_weights()
+        self._gain_cache: dict[tuple[int, int], tuple] = {}
+        self.stats = dict(gain_calls=0, gain_cache_hits=0, moves=0)
+
+    @property
+    def part_edges(self) -> list[set[int]]:
+        """Per-partition edge sets (compat view of the incidence mask)."""
+        return [set(np.flatnonzero(row).tolist()) for row in self._edge_mask]
 
     def cover(self, e: int) -> dict[int, np.ndarray]:
         return self.sm.cover(e)
 
+    def free_space(self, p: int) -> float:
+        """Capacity headroom of p, tracked incrementally across moves
+        (exact for integer item weights; for float weights it may differ
+        from ``Placement.free_space`` in the last ulp — summation order)."""
+        return self.pl.capacity - float(self._loads[p])
+
     def shared_edges(self, src: int, dest: int) -> list[int]:
         """Edges accessing both partitions, ascending edge id."""
-        return sorted(self.part_edges[src] & self.part_edges[dest])
+        return np.flatnonzero(
+            self._edge_mask[src] & self._edge_mask[dest]
+        ).tolist()
 
     def union_edges(self, src: int, dest: int) -> np.ndarray:
         """Edges accessing either partition, ascending edge id."""
-        return np.fromiter(
-            sorted(self.part_edges[src] | self.part_edges[dest]),
-            dtype=np.int64,
-        )
+        return np.flatnonzero(self._edge_mask[src] | self._edge_mask[dest])
+
+    def apply_move(self, dest: int, items: np.ndarray) -> None:
+        """Copy `items` into partition dest (the only legal membership
+        mutation): updates the load ledger and stamps dest's mem epoch."""
+        self.pl.member[dest, items] = True
+        self._loads[dest] += float(self.hg.node_weights[items].sum())
+        self.mem_epoch[dest] += 1
+        self.stats["moves"] += 1
 
     def recompute_edges(self, edges: np.ndarray) -> None:
         """Re-derive the covers of `edges` in ONE batched engine call
-        (bit-identical to per-edge cover_for_query) and resync part_edges."""
-        for e in edges:
-            e = int(e)
-            for p in self.sm.cover(e):
-                self.part_edges[p].discard(e)
+        (bit-identical to per-edge cover_for_query), resync the incidence
+        mask, and stamp the cov epoch of every partition whose pin
+        attribution changed."""
+        edges = np.asarray(edges, dtype=np.int64)
+        if not len(edges):
+            return
+        _, pidx = self.hg.pin_indices(edges)
+        old_pp = self.sm.pin_parts[pidx].copy()
+        self._edge_mask[:, edges] = False
         self.sm.refresh_edges(edges)
-        for e in edges:
-            e = int(e)
-            for p in self.sm.cover(e):
-                self.part_edges[p].add(e)
+        new_pp = self.sm.pin_parts[pidx]
+        counts = np.fromiter(
+            (len(self.sm.chosen(int(e))) for e in edges), dtype=np.int64,
+            count=len(edges),
+        )
+        parts = (
+            np.concatenate([self.sm.chosen(int(e)) for e in edges])
+            if counts.sum() else np.zeros(0, dtype=np.int64)
+        )
+        self._edge_mask[parts, np.repeat(edges, counts)] = True
+        changed = old_pp != new_pp
+        if changed.any():
+            touched = np.unique(
+                np.concatenate([old_pp[changed], new_pp[changed]])
+            )
+            self.cov_epoch[touched] += 1
+
+    def _stamp(self, key: tuple[int, int]) -> tuple[int, int, int]:
+        """The epochs (gain of key) is a pure function of."""
+        src, dest = key
+        return (
+            int(self.cov_epoch[src]), int(self.cov_epoch[dest]),
+            int(self.mem_epoch[dest]),
+        )
+
+    def max_gain(self, src: int, dest: int):
+        """Algorithm 5 through the epoch cache: recompute only when an epoch
+        the pair depends on moved, else return the memoized (gain, items)."""
+        return self.max_gain_many([(src, dest)])[(src, dest)]
+
+    def max_gain_many(self, pairs: list[tuple[int, int]]):
+        """Epoch-cached batch gain evaluation.  Cache hits are answered from
+        the memo; the misses run through ONE lockstep batched peel (or the
+        pure-Python oracle pair-by-pair under ``lmbr_peel="reference"``).
+        Returns {pair: (gain, items)} covering every requested pair."""
+        self.stats["gain_calls"] += len(pairs)
+        use_cache = _flags.FLAGS.get("lmbr_gain_cache", True)
+        out: dict[tuple[int, int], tuple] = {}
+        misses: list[tuple[int, int]] = []
+        pending: set[tuple[int, int]] = set()
+        for key in pairs:
+            if key in out or key in pending:
+                continue
+            if use_cache:
+                hit = self._gain_cache.get(key)
+                if hit is not None and hit[0] == self._stamp(key):
+                    self.stats["gain_cache_hits"] += 1
+                    out[key] = (hit[1], hit[2])
+                    continue
+            misses.append(key)
+            pending.add(key)
+        if misses:
+            if _flags.FLAGS.get("lmbr_peel", "vector") == "reference":
+                computed = {
+                    k: _lmbr_max_gain_reference(self, *k) for k in misses
+                }
+            else:
+                computed = _lmbr_gain_batch(self, misses)
+            if use_cache:
+                for k, v in computed.items():
+                    self._gain_cache[k] = (self._stamp(k), *v)
+            out.update(computed)
+        return out
 
     def spans(self) -> np.ndarray:
         return self.sm.spans()
 
 
-def _lmbr_max_gain(state: _LMBRState, src: int, dest: int):
+def _lmbr_max_gain_reference(state: _LMBRState, src: int, dest: int):
     """Algorithm 5: best group of items to copy src->dest and its gain
     (benefit per unit weight copied).  Returns (gain, items) or (0, None).
 
-    Pure-Python peeling (no Hypergraph construction): this is LMBR's inner
-    loop, called O(N^2) times per move.  Items already resident on dest are
-    free pins (cost 0, never peeled) — the weighted generalization of the
-    paper's getKDensestNodes accounting."""
+    Pure-Python peel, the executable specification (kept as the oracle the
+    vectorized engine is tested against — `_LMBRState.max_gain_many`
+    dispatches between the two on ``flags.FLAGS["lmbr_peel"]``; both are
+    bit-identical: same densest subset, same gain float, same tie-breaks —
+    ascending edge id in the projection scan, lowest item id on density
+    ties — enforced by tests/test_lmbr_peel.py).
+
+    Projection: for each edge accessing both partitions (ascending edge id),
+    the items it reads from src that are NOT already on dest — items already
+    resident on dest are free pins (cost 0, never peeled), the weighted
+    generalization of the paper's getKDensestNodes accounting.  The peel
+    then repeatedly removes the lowest-degree item (ties -> lowest item id)
+    and records the best benefit/weight ratio among states that fit dest's
+    free space."""
     hg, pl = state.hg, state.pl
     shared = state.shared_edges(src, dest)  # ascending edge id, deterministic
     if not shared:
         return 0.0, None
-    c_dest = pl.free_space(dest)
+    c_dest = state.free_space(dest)
     if c_dest <= 1e-12:
         return 0.0, None
     node_w = hg.node_weights
@@ -398,6 +555,257 @@ def _lmbr_max_gain(state: _LMBRState, src: int, dest: int):
     return best_gain, np.asarray(sorted(best_items), dtype=np.int64)
 
 
+def _ranged_gather(lo: np.ndarray, hi: np.ndarray):
+    """Flat indices of the concatenated ranges [lo_i, hi_i); also sizes."""
+    sizes = hi - lo
+    total = int(sizes.sum())
+    if not total:
+        return np.zeros(0, dtype=np.int64), sizes
+    start = np.zeros(len(sizes) + 1, dtype=np.int64)
+    np.cumsum(sizes, out=start[1:])
+    idx = np.repeat(lo, sizes) + (
+        np.arange(total, dtype=np.int64) - np.repeat(start[:-1], sizes)
+    )
+    return idx, sizes
+
+
+def _lmbr_max_gain_vectorized(state: _LMBRState, src: int, dest: int):
+    """Single-pair view of the batched peel (`_lmbr_gain_batch`)."""
+    return _lmbr_gain_batch(state, [(src, dest)])[(src, dest)]
+
+
+def _proj_entry(key, c_dest, bpins, bedges, node_w, edge_w):
+    """One pair's peel inputs from its costly-pin subsequence.
+
+    ``bpins``/``bedges`` hold the pair's costly pins in projection scan
+    order — edges ascending, pins in edge order — exactly the sequence the
+    pure-Python oracle iterates, so every left-fold below reproduces its
+    float accumulations bit-for-bit."""
+    first = np.concatenate([[True], bedges[1:] != bedges[:-1]])
+    starts = np.flatnonzero(first)
+    kept = bedges[starts]            # edges with >= 1 costly pin, ascending
+    pin_cnt = np.diff(np.concatenate([starts, [len(bedges)]]))
+    we = edge_w[kept].astype(np.float64)
+    cedge = np.repeat(np.arange(len(kept), dtype=np.int64), pin_cnt)
+    uniq, first_idx = np.unique(bpins, return_index=True)
+    loc = np.searchsorted(uniq, bpins)
+    # item pool weight: left-fold in first-encounter order, matching the
+    # oracle's sequential sum over dict insertion order
+    totw0 = float(np.cumsum(node_w[bpins[np.sort(first_idx)]])[-1])
+    return (key, c_dest, we, uniq, loc, cedge, pin_cnt, totw0)
+
+
+def _project_fan_in(state, dest, srcs, out, proj):
+    """Project every (src, dest) pair of one destination in one pass: gather
+    the pins of dest's covered edges once, drop the free ones (already on
+    dest), and split the remainder into per-serving-partition blocks with a
+    single stable argsort.  Each block is exactly the costly-pin sequence
+    the per-pair projection would produce (edges ascending, pin order)."""
+    hg, pl = state.hg, state.pl
+    e_d = np.flatnonzero(state._edge_mask[dest])
+    # span-1 edges live on dest alone: they are never shared with a source
+    # and all their pins are resident (free), so drop them before gathering
+    e_d = e_d[state.sm.spans()[e_d] > 1]
+    c_dest = state.free_space(dest)
+    if not len(e_d) or c_dest <= 1e-12:
+        for s in srcs:
+            out[(s, dest)] = (0.0, None)
+        return
+    ptr, pidx = hg.pin_indices(e_d)
+    nodes = hg.edge_nodes[pidx]
+    sp = state.sm.pin_parts[pidx]
+    eids = np.repeat(e_d, np.diff(ptr))
+    sel = np.flatnonzero(~pl.member[dest, nodes])  # costly pins only
+    order = sel[np.argsort(sp[sel], kind="stable")]
+    svals = sp[order]
+    bstart = np.flatnonzero(
+        np.concatenate([[True], svals[1:] != svals[:-1]])
+    ) if len(order) else np.zeros(0, dtype=np.int64)
+    bend = np.concatenate([bstart[1:], [len(order)]])
+    lookup = {int(s): i for i, s in enumerate(svals[bstart])}
+    for s in srcs:
+        i = lookup.get(s)
+        if i is None:  # no shared edge reads a costly item from s
+            out[(s, dest)] = (0.0, None)
+            continue
+        block = order[bstart[i]: bend[i]]
+        proj.append(_proj_entry(
+            (s, dest), c_dest, nodes[block], eids[block],
+            hg.node_weights, hg.edge_weights,
+        ))
+
+
+def _project_fan_out(state, src, dests, out, proj):
+    """Project every (src, dest) pair of one source in one pass: gather the
+    pins src serves once; each destination then masks that block to its
+    shared edges and non-resident items (2 row gathers per pair)."""
+    hg, pl = state.hg, state.pl
+    e_s = np.flatnonzero(state._edge_mask[src])
+    # span-1 edges live on src alone: never shared with any destination
+    e_s = e_s[state.sm.spans()[e_s] > 1]
+    if not len(e_s):
+        for d in dests:
+            out[(src, d)] = (0.0, None)
+        return
+    ptr, pidx = hg.pin_indices(e_s)
+    nodes = hg.edge_nodes[pidx]
+    served = np.flatnonzero(state.sm.pin_parts[pidx] == src)
+    bpins = nodes[served]
+    bedges = np.repeat(e_s, np.diff(ptr))[served]
+    for d in dests:
+        c_dest = state.free_space(d)
+        if c_dest <= 1e-12:
+            out[(src, d)] = (0.0, None)
+            continue
+        keep = state._edge_mask[d, bedges] & ~pl.member[d, bpins]
+        if not keep.any():
+            out[(src, d)] = (0.0, None)
+            continue
+        sub = np.flatnonzero(keep)
+        proj.append(_proj_entry(
+            (src, d), c_dest, bpins[sub], bedges[sub],
+            hg.node_weights, hg.edge_weights,
+        ))
+
+
+def _lmbr_gain_batch(state: _LMBRState, pairs: list[tuple[int, int]]):
+    """Batched Algorithm 5: evaluate MANY (src, dest) candidates in one
+    lockstep peel.  Returns {(src, dest): (gain, items-or-None)}, each entry
+    bit-identical to the pure-Python oracle run on that pair alone.
+
+    Projection (per pair, flat): the pins of all shared edges are gathered
+    once and masked to the costly ones — served by src per the maintainer's
+    flat ``pin_parts`` attribution, and not already resident on dest (free
+    pins cost 0 and are never peeled).  No per-edge cover dicts are built.
+
+    Peel (all pairs in lockstep): pair-local items live in dense (G, Umax)
+    matrices (degree, alive, weight), edges in flat CSR arrays.  Each round
+    peels one item from every still-active pair: a single row-wise
+    ``argmin`` picks each pair's lowest-degree item (+inf padding; ties ->
+    lowest item id because columns are sorted by item id), and scatter-adds
+    (``np.add.at`` — sequential over its index arrays) retire dying edges
+    and their degree contributions in the oracle's exact accumulation order
+    (edges ascending within a pair, pins in edge order).  Pairs drop out of
+    the round set when their remaining benefit or item pool is exhausted.
+    Because every pair's float-op sequence is unchanged from its solo run,
+    lockstep execution cannot perturb results — same subsets, same gain
+    floats, even under adversarial near-ties."""
+    hg = state.hg
+    node_w = hg.node_weights
+    out: dict[tuple[int, int], tuple] = {}
+    proj = []  # (key, c_dest, we, uniq, loc, cedge, pin_cnt, totw0)
+    # shared-projection grouping: fan-in pairs (*, d) reuse one gather of
+    # d's covered edges (blocks split by serving partition); the rest group
+    # by src, reusing one gather of src's served pins across destinations
+    by_dest: dict[int, list[int]] = {}
+    for s, d in pairs:
+        by_dest.setdefault(d, []).append(s)
+    by_src: dict[int, list[int]] = {}
+    for d, srcs in by_dest.items():
+        if len(srcs) >= 2:
+            _project_fan_in(state, d, srcs, out, proj)
+        else:
+            by_src.setdefault(srcs[0], []).append(d)
+    for s, dests in by_src.items():
+        _project_fan_out(state, s, dests, out, proj)
+    if not proj:
+        return out
+
+    # ---- flat batch assembly
+    G = len(proj)
+    U = np.array([len(p[3]) for p in proj], dtype=np.int64)
+    K = np.array([len(p[2]) for p in proj], dtype=np.int64)
+    Umax = int(U.max())
+    ebase = np.zeros(G + 1, dtype=np.int64)
+    np.cumsum(K, out=ebase[1:])
+    we_flat = np.concatenate([p[2] for p in proj])
+    pair_of_edge = np.repeat(np.arange(G, dtype=np.int64), K)
+    # edge -> costly pins CSR (pins are pair-major, edge-major, pin order)
+    pin_cnt_flat = np.concatenate([p[6] for p in proj])
+    eptr = np.zeros(int(ebase[-1]) + 1, dtype=np.int64)
+    np.cumsum(pin_cnt_flat, out=eptr[1:])
+    pin_col = np.concatenate([p[4] for p in proj])
+    pin_edge = np.concatenate(
+        [p[5] + ebase[i] for i, p in enumerate(proj)]
+    )
+    pin_row = pair_of_edge[pin_edge]
+    # item slot (pair, col) -> incident kept edges, ascending scan order
+    inc_edges = np.concatenate([
+        (p[5] + ebase[i])[np.argsort(p[4], kind="stable")]
+        for i, p in enumerate(proj)
+    ])
+    inc_cnt = np.zeros((G, Umax), dtype=np.int64)
+    for i, p in enumerate(proj):
+        inc_cnt[i, : U[i]] = np.bincount(p[4], minlength=U[i])
+    inc_ptr = np.zeros(G * Umax + 1, dtype=np.int64)
+    np.cumsum(inc_cnt.ravel(), out=inc_ptr[1:])
+    # dense per-item state: +inf padding so argmin never picks a pad slot
+    valid = np.arange(Umax, dtype=np.int64)[None, :] < U[:, None]
+    cand = np.full((G, Umax), np.inf, dtype=np.float64)
+    cand[valid] = 0.0
+    # degrees accumulate in the oracle's scan order (np.add.at is
+    # sequential over its index arrays), bit-for-bit the dict loop
+    np.add.at(cand, (pin_row, pin_col), we_flat[pin_edge])
+    alive = valid.copy()
+    nodew = np.zeros((G, Umax), dtype=np.float64)
+    nodew[valid] = np.concatenate([node_w[p[3]] for p in proj])
+    # left-fold cumsum == the oracle's sequential `total_benefit += we`
+    benefit = np.array(
+        [float(np.cumsum(p[2])[-1]) for p in proj], dtype=np.float64
+    )
+    totw = np.array([p[7] for p in proj], dtype=np.float64)
+    c_arr = np.array([p[1] for p in proj], dtype=np.float64)
+    n_alive = U.copy()
+    edge_alive = np.ones(int(ebase[-1]), dtype=bool)
+    best_gain = np.zeros(G, dtype=np.float64)
+    best_set = np.zeros((G, Umax), dtype=bool)
+    has_best = np.zeros(G, dtype=bool)
+
+    # ---- lockstep weighted peel (getKDensestNodes, Asahiro-style greedy)
+    act = np.flatnonzero((benefit > 1e-12) & (n_alive > 0))
+    while len(act):
+        # record states that fit the destination's free space
+        t = totw[act]
+        fits = t <= c_arr[act] + 1e-12
+        if fits.any():
+            rows = act[fits]
+            g = benefit[rows] / np.maximum(t[fits], 1e-12)
+            imp = g > best_gain[rows]
+            if imp.any():
+                r2 = rows[imp]
+                best_gain[r2] = g[imp]
+                best_set[r2] = alive[r2]
+                has_best[r2] = True
+        # peel each active pair's lowest-degree item (ties -> lowest id)
+        j = np.argmin(cand[act], axis=1)
+        alive[act, j] = False
+        cand[act, j] = np.inf
+        n_alive[act] -= 1
+        totw[act] -= nodew[act, j]
+        # retire this round's dying edges (ascending within each pair)
+        slot = act * Umax + j
+        idx, _ = _ranged_gather(inc_ptr[slot], inc_ptr[slot + 1])
+        cand_e = inc_edges[idx]
+        de = cand_e[edge_alive[cand_e]]
+        if len(de):
+            edge_alive[de] = False
+            np.add.at(benefit, pair_of_edge[de], -we_flat[de])
+            pidx2, dsz = _ranged_gather(eptr[de], eptr[de + 1])
+            cols = pin_col[pidx2]
+            rows_t = np.repeat(pair_of_edge[de], dsz)
+            wrep = np.repeat(we_flat[de], dsz)
+            lv = alive[rows_t, cols]     # dead items never re-compared
+            np.add.at(cand, (rows_t[lv], cols[lv]), -wrep[lv])
+        act = act[(benefit[act] > 1e-12) & (n_alive[act] > 0)]
+
+    for i, p in enumerate(proj):
+        if has_best[i]:
+            out[p[0]] = (float(best_gain[i]), p[3][best_set[i, : U[i]]])
+        else:
+            out[p[0]] = (0.0, None)
+    return out
+
+
 def lmbr(
     hg: Hypergraph,
     n: int,
@@ -411,7 +819,16 @@ def lmbr(
     """Improved LMBR (Algorithm 4 + Algorithm 5).
 
     `initial` warm-starts from an existing placement (incremental refits and
-    the paper's use of LMBR as a capacity-fixup subroutine)."""
+    the paper's use of LMBR as a capacity-fixup subroutine).
+
+    Determinism contract: moves are applied in descending-gain order from a
+    heap whose entries tie-break on (src, dest, version); candidate subsets
+    come from the Algorithm 5 peel (ascending edge id in the projection,
+    lowest item id on density ties), so repeated runs produce bit-identical
+    placements regardless of peel backend (``flags.FLAGS["lmbr_peel"]``) or
+    gain-cache setting (``flags.FLAGS["lmbr_gain_cache"]``).  The fitted
+    ``Placement`` carries the move-engine counters in ``.stats`` (moves,
+    gain_calls, gain_cache_hits, peel backend)."""
     if initial is not None:
         pl = Placement(
             initial.member.copy(), capacity, hg.node_weights
@@ -434,31 +851,33 @@ def lmbr(
     version = np.zeros((n, n), dtype=np.int64)
     pq: list[tuple[float, int, int, int]] = []
 
-    def push(src: int, dest: int):
-        gain, items = _lmbr_max_gain(state, src, dest)
-        version[src, dest] += 1
-        if gain > 0 and items is not None:
-            heapq.heappush(pq, (-gain, src, dest, int(version[src, dest])))
+    def push_many(pairlist: list[tuple[int, int]]):
+        # one batched (epoch-cached) gain evaluation for the whole refresh
+        # set; heap-entry content is insertion-order independent, so this is
+        # behaviorally identical to pushing pair-by-pair
+        results = state.max_gain_many(pairlist)
+        for s, d in pairlist:
+            gain, items = results[(s, d)]
+            version[s, d] += 1
+            if gain > 0 and items is not None:
+                heapq.heappush(pq, (-gain, s, d, int(version[s, d])))
 
-    for src in range(n):
-        for dest in range(n):
-            if src != dest:
-                push(src, dest)
+    push_many([(s, d) for s in range(n) for d in range(n) if s != d])
 
     moves = 0
     while pq and moves < max_moves:
         neg_gain, src, dest, ver = heapq.heappop(pq)
         if ver != version[src, dest]:
             continue  # stale entry
-        gain, items = _lmbr_max_gain(state, src, dest)  # re-verify vs live state
+        gain, items = state.max_gain(src, dest)  # re-verify vs live state
         if items is None or gain <= 0:
             continue
         w = hg.node_weights[items].sum()
-        if w > pl.free_space(dest) + 1e-9:
-            push(src, dest)
+        if w > state.free_space(dest) + 1e-9:
+            push_many([(src, dest)])
             continue
         # apply the move: copy items into dest
-        pl.member[dest, items] = True
+        state.apply_move(dest, items)
         moves += 1
         # recompute covers of edges that might benefit (those accessing src
         # or dest and touching a moved item) — ONE batched engine call over
@@ -472,11 +891,17 @@ def lmbr(
             touches = ch[ptr[1:]] > ch[ptr[:-1]]
             state.recompute_edges(cand_arr[touches])
         # refresh PQ entries involving dest (Algorithm 4 lines 12-15)
+        pairs: list[tuple[int, int]] = []
         for g in range(n):
             if g != dest:
-                push(g, dest)
-                push(dest, g)
-        push(src, dest)
+                pairs.append((g, dest))
+                pairs.append((dest, g))
+        pairs.append((src, dest))
+        push_many(pairs)
+    pl.stats = dict(
+        state.stats, peel=_flags.FLAGS.get("lmbr_peel", "vector"),
+        gain_cache=bool(_flags.FLAGS.get("lmbr_gain_cache", True)),
+    )
     return pl
 
 

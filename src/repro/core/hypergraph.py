@@ -136,8 +136,11 @@ class Hypergraph:
         )
 
     # ------------------------------------------------------------ subgraphs
-    def edges_csr(self, edge_ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """CSR (ptr, nodes) of the given hyperedges, vectorized gather."""
+    def pin_indices(self, edge_ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """CSR (ptr, idx) of the given hyperedges where ``idx`` are positions
+        into the global pin arrays (``edge_nodes`` and anything aligned with
+        it, e.g. a per-pin replica-selection array).  Pin order within each
+        edge is preserved; edges appear in ``edge_ids`` order."""
         edge_ids = np.asarray(edge_ids, dtype=np.int64)
         sizes = self.edge_ptr[edge_ids + 1] - self.edge_ptr[edge_ids]
         ptr = np.zeros(len(edge_ids) + 1, dtype=np.int64)
@@ -145,7 +148,12 @@ class Hypergraph:
         total = int(ptr[-1])
         base = np.repeat(self.edge_ptr[edge_ids], sizes)
         off = np.arange(total, dtype=np.int64) - np.repeat(ptr[:-1], sizes)
-        return ptr, self.edge_nodes[base + off]
+        return ptr, base + off
+
+    def edges_csr(self, edge_ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """CSR (ptr, nodes) of the given hyperedges, vectorized gather."""
+        ptr, idx = self.pin_indices(edge_ids)
+        return ptr, self.edge_nodes[idx]
 
     def subhypergraph_edges(self, edge_ids: np.ndarray) -> "Hypergraph":
         """Keep the given hyperedges; node ids are preserved (no relabel)."""

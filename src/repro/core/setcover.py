@@ -64,11 +64,16 @@ _WORD = 64
 @dataclasses.dataclass
 class Placement:
     """Layout of items onto partitions. member[p, v] == True iff a copy of
-    item v is stored on partition p."""
+    item v is stored on partition p.
+
+    ``stats`` is an optional fitting-diagnostics dict attached by the
+    producing algorithm (e.g. LMBR's move-engine counters); it never
+    influences placement semantics."""
 
     member: np.ndarray  # (N, V) bool
     capacity: float
     node_weights: np.ndarray  # (V,)
+    stats: dict | None = None
 
     @staticmethod
     def empty(num_partitions: int, num_items: int, capacity: float,
@@ -161,7 +166,9 @@ def cover_for_query(query: np.ndarray, member: np.ndarray):
     """Like greedy_set_cover but also returns, per chosen partition, the item
     ids the query reads from it (getAccessedItems for every member of the
     cover).  Items are attributed to the first chosen partition that holds
-    them — i.e. the actual replica-selection decision."""
+    them — i.e. the actual replica-selection decision.  Same tie-break as
+    greedy_set_cover (maximal gain, ties -> lowest partition id), so the
+    chosen list is identical to it; raises ValueError on unplaced items."""
     query = np.asarray(query, dtype=np.int64)
     remaining = np.ones(len(query), dtype=bool)
     sub = member[:, query]
@@ -180,7 +187,8 @@ def cover_for_query(query: np.ndarray, member: np.ndarray):
 
 
 def query_span(query: np.ndarray, member: np.ndarray) -> int:
-    """getQuerySpan."""
+    """getQuerySpan: size of the greedy cover (exact same selection as
+    `greedy_set_cover`, ties -> lowest partition id)."""
     return len(greedy_set_cover(query, member))
 
 
@@ -379,12 +387,14 @@ def batched_cover_csr(
 def batched_spans_csr(
     edge_ptr: np.ndarray, edge_nodes: np.ndarray, member: np.ndarray
 ) -> np.ndarray:
-    """Spans only (cheapest batched path)."""
+    """Spans only (cheapest batched path).  Inherits `batched_cover_csr`'s
+    exactness contract: element-wise equal to `query_span` per query."""
     return batched_cover_csr(edge_ptr, edge_nodes, member).spans
 
 
 def spans_for_workload(hg, placement: Placement) -> np.ndarray:
-    """Span of every hyperedge in `hg` under `placement` (batched engine)."""
+    """Span of every hyperedge in `hg` under `placement` (batched engine,
+    bit-identical to the per-query reference)."""
     return batched_spans_csr(hg.edge_ptr, hg.edge_nodes, placement.member)
 
 
@@ -398,48 +408,57 @@ class SpanMaintainer:
     Callers MUST notify every item whose membership row changed.
 
     With ``with_covers=True`` the maintainer additionally keeps every edge's
-    full replica selection — ``cover(e)`` maps each chosen partition (in
-    greedy selection order) to the items the edge reads from it — and
-    ``refresh_edges`` re-derives an explicit edge set in one batched cover
-    instead of per-edge Python loops.  This is the LMBR consumption path:
-    LMBR's move loop invalidates an algorithm-defined edge set (narrower
-    than the full incidence of the moved items), so it bypasses the dirty
-    set and names its edges directly."""
+    full replica selection in FLAT form — ``pin_parts`` holds, for every pin
+    of the hypergraph's CSR, the partition that serves it, and ``chosen(e)``
+    the partitions of e's cover in greedy selection order.  ``cover(e)``
+    synthesizes the {partition: accessed items} dict on demand (partitions in
+    selection order, items in pin order — identical to ``cover_for_query``),
+    and ``refresh_edges`` re-derives an explicit edge set in one batched
+    cover instead of per-edge Python loops.  This is the LMBR consumption
+    path: LMBR's move loop invalidates an algorithm-defined edge set
+    (narrower than the full incidence of the moved items), so it bypasses
+    the dirty set and names its edges directly — and LMBR's vectorized gain
+    engine reads ``pin_parts`` directly instead of per-edge dicts."""
 
     def __init__(self, hg, placement: Placement, with_covers: bool = False):
         self.hg = hg
         self.placement = placement
         self._node_ptr, self._node_edges = hg.incidence()
-        self._covers: list[dict[int, np.ndarray]] | None = None
+        self._pin_part: np.ndarray | None = None  # (P,) serving partition
+        self._chosen: list[np.ndarray] | None = None  # per edge, greedy order
         if with_covers:
             cov = batched_cover_csr(
                 hg.edge_ptr, hg.edge_nodes, placement.member,
                 with_pin_parts=True,
             )
             self._spans = cov.spans
-            self._covers = self._cover_dicts(
-                cov, hg.edge_ptr, hg.edge_nodes
-            )
+            self._pin_part = cov.pin_parts
+            self._chosen = [cov.chosen(e).copy() for e in range(hg.num_edges)]
         else:
             self._spans = batched_spans_csr(
                 hg.edge_ptr, hg.edge_nodes, placement.member
             )
         self._dirty = np.zeros(hg.num_edges, dtype=bool)
 
-    @staticmethod
-    def _cover_dicts(cov: "WorkloadCover", ptr, nodes):
-        """Per-edge {partition: accessed items} dicts, partitions in greedy
-        selection order (dict insertion order == cover_for_query order)."""
-        out = []
-        for i in range(len(ptr) - 1):
-            q = nodes[ptr[i]: ptr[i + 1]]
-            pp = cov.pin_parts[ptr[i]: ptr[i + 1]]
-            out.append({int(p): q[pp == p] for p in cov.chosen(i)})
-        return out
+    @property
+    def pin_parts(self) -> np.ndarray:
+        """Serving partition of every pin, aligned with ``hg.edge_nodes``
+        (requires with_covers=True)."""
+        return self._pin_part
+
+    def chosen(self, e: int) -> np.ndarray:
+        """Partitions of edge e's cover in greedy selection order (requires
+        with_covers=True)."""
+        return self._chosen[e]
 
     def cover(self, e: int) -> dict[int, np.ndarray]:
-        """Replica selection of edge e (requires with_covers=True)."""
-        return self._covers[e]
+        """Replica selection of edge e (requires with_covers=True): maps each
+        chosen partition, in greedy selection order, to the items the edge
+        reads from it.  Built on demand from the flat pin attribution."""
+        lo, hi = self.hg.edge_ptr[e], self.hg.edge_ptr[e + 1]
+        q = self.hg.edge_nodes[lo:hi]
+        pp = self._pin_part[lo:hi]
+        return {int(p): q[pp == p] for p in self._chosen[e]}
 
     def refresh_edges(self, edge_ids) -> None:
         """Batched recompute of exactly `edge_ids` — bit-identical to calling
@@ -447,15 +466,17 @@ class SpanMaintainer:
         edge_ids = np.asarray(edge_ids, dtype=np.int64)
         if not len(edge_ids):
             return
-        ptr, nodes = self.hg.edges_csr(edge_ids)
+        ptr, pidx = self.hg.pin_indices(edge_ids)
+        nodes = self.hg.edge_nodes[pidx]
         cov = batched_cover_csr(
             ptr, nodes, self.placement.member,
-            with_pin_parts=self._covers is not None,
+            with_pin_parts=self._pin_part is not None,
         )
         self._spans[edge_ids] = cov.spans
-        if self._covers is not None:
-            for i, d in enumerate(self._cover_dicts(cov, ptr, nodes)):
-                self._covers[int(edge_ids[i])] = d
+        if self._pin_part is not None:
+            self._pin_part[pidx] = cov.pin_parts
+            for i, e in enumerate(edge_ids):
+                self._chosen[int(e)] = cov.chosen(i).copy()
         self._dirty[edge_ids] = False
 
     def notify_items(self, items) -> None:
@@ -476,7 +497,7 @@ class SpanMaintainer:
     def spans(self) -> np.ndarray:
         d = np.flatnonzero(self._dirty)
         if len(d):
-            if self._covers is not None:
+            if self._pin_part is not None:
                 self.refresh_edges(d)  # keeps covers consistent with spans
             else:
                 ptr, nodes = self.hg.edges_csr(d)

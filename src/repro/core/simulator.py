@@ -61,6 +61,7 @@ class SimulationResult:
     shipped_gb: float
     placement_seconds: float
     replication_factor: float
+    placement_stats: dict | None = None  # fitter diagnostics (Placement.stats)
 
     @property
     def avg_span(self) -> float:
@@ -77,7 +78,7 @@ class SimulationResult:
         return float(self.access_load.max() / m) if m > 0 else 0.0
 
     def summary(self) -> dict:
-        return dict(
+        out = dict(
             algorithm=self.algorithm,
             avg_span=round(self.avg_span, 4),
             max_span=self.max_span,
@@ -87,6 +88,12 @@ class SimulationResult:
             placement_s=round(self.placement_seconds, 3),
             load_imbalance=round(self.load_imbalance, 3),
         )
+        if self.placement_stats:
+            # fitter-side counters (e.g. LMBR moves / gain-cache hit rate)
+            out.update(
+                {f"fit_{k}": v for k, v in self.placement_stats.items()}
+            )
+        return out
 
 
 class Simulator:
@@ -161,6 +168,7 @@ class Simulator:
             shipped_gb=total_shipped,
             placement_seconds=dt,
             replication_factor=pl.replication_factor(),
+            placement_stats=pl.stats,
         )
 
     def compare(

@@ -24,7 +24,8 @@ from .hypergraph import Hypergraph
 
 __all__ = [
     "Workload", "random_workload", "snowflake_workload",
-    "ispd_like_workload", "tpch_heterogeneous", "PAPER_DEFAULTS",
+    "ispd_like_workload", "tpch_heterogeneous", "lmbr_stress_workload",
+    "PAPER_DEFAULTS", "LMBR_STRESS_DEFAULTS",
 ]
 
 PAPER_DEFAULTS = dict(
@@ -183,6 +184,34 @@ def tpch_heterogeneous(
         item_weights=weights, **kw,
     )
     wl.name = f"tpch-hetero(sf={scale_factor})"
+    return wl
+
+
+# sized so the vectorized LMBR move engine finishes in tens of seconds while
+# the pure-Python reference peel needs minutes (benchmarks/bench_lmbr.py runs
+# the reference under a timeout and marks it infeasible when it blows it)
+LMBR_STRESS_DEFAULTS = dict(
+    num_items=2500, num_queries=10000, density=12,
+    capacity=50, num_partitions=64, max_moves=1200,
+)
+
+
+def lmbr_stress_workload(
+    num_items: int = LMBR_STRESS_DEFAULTS["num_items"],
+    num_queries: int = LMBR_STRESS_DEFAULTS["num_queries"],
+    density: float = LMBR_STRESS_DEFAULTS["density"],
+    seed: int = 0,
+) -> Workload:
+    """The LMBR stress tier: a Random-dataset instance ~6x the paper's
+    default LMBR workload (2.5x items, 2.5x queries, 64 partitions in
+    ``LMBR_STRESS_DEFAULTS``), beyond what the pre-vectorization LMBR could
+    process in an interactive budget.  Partition count and capacity live in
+    ``LMBR_STRESS_DEFAULTS`` so benchmarks and tests agree on the tier."""
+    wl = random_workload(
+        num_items=num_items, num_queries=num_queries,
+        min_query=3, max_query=11, density=density, seed=seed,
+    )
+    wl.name = f"lmbr-stress(V={num_items},E={num_queries})"
     return wl
 
 

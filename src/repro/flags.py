@@ -39,6 +39,17 @@ FLAGS = {
     # and the jitted backend past that (dispatch + uint32-view overhead
     # amortized), so the default sits mid-band.
     "span_dispatch_threshold": 48_000,
+    # LMBR Algorithm-5 peel backend.  "vector" (default) runs the batched
+    # CSR peel (flat pin-attribution projection + scatter-add degree
+    # updates); "reference" the retained pure-Python oracle.  Bit-identical
+    # results (same subsets, same gains, same tie-breaks), so this is purely
+    # a performance knob — benchmarks/bench_lmbr.py times both.
+    "lmbr_peel": "vector",
+    # epoch-keyed (src, dest) -> (gain, items) memo in the LMBR move loop:
+    # a pair is only re-peeled when a partition epoch it depends on moved
+    # (cover/pin-attribution epoch of either side, membership epoch of the
+    # destination).  Exactness-neutral; off reproduces the uncached engine.
+    "lmbr_gain_cache": True,
 }
 
 
@@ -61,6 +72,13 @@ def set_variant(spec: str):
             FLAGS["moe_cf"] = float(part[2:])
         elif part.startswith("spanth"):
             FLAGS["span_dispatch_threshold"] = int(part[len("spanth"):])
+        elif part.startswith("peel"):
+            backend = part[len("peel"):]
+            if backend not in ("vector", "reference"):
+                raise ValueError(f"unknown lmbr peel backend {backend!r}")
+            FLAGS["lmbr_peel"] = backend
+        elif part.startswith("lmbrcache"):
+            FLAGS["lmbr_gain_cache"] = bool(int(part[len("lmbrcache"):]))
         elif part.startswith("span"):
             backend = part[len("span"):]
             if backend not in ("auto", "numpy", "jax", "pallas"):
@@ -73,4 +91,5 @@ def set_variant(spec: str):
 def reset():
     FLAGS.update(mla_decomp=False, accum_steps=1, sp=False, sp_attn=False,
                  moe_cf=None, span_backend="auto",
-                 span_dispatch_threshold=48_000)
+                 span_dispatch_threshold=48_000, lmbr_peel="vector",
+                 lmbr_gain_cache=True)
