@@ -22,6 +22,7 @@ SECTIONS = [
     ("fig9_ispd", "fig9: ISPD98-like circuit hypergraphs"),
     ("bench_spans", "span engine: reference loop vs batched bitset (+jax)"),
     ("bench_lmbr", "LMBR move engine: reference peel vs vectorized + cache"),
+    ("bench_online", "online serving: router qps, drift recovery, failover"),
     ("placement_applications", "framework: MoE experts / shards / checkpoints"),
     ("kernel_bench", "Pallas kernels vs jnp oracles (CPU interpret)"),
     ("roofline_table", "roofline terms from dry-run artifacts"),

@@ -7,7 +7,9 @@ Layout:
   hpa         — multilevel hypergraph partitioner (hMETIS stand-in)
   algorithms  — IHPA / DS / PRA / LMBR (+ Random, HPA baselines)
   three_way   — fixed RF=3 variants (PRA-3W, SDA, IHPA-3W)
-  simulator   — trace-driven simulator + energy model
+  simulator   — trace-driven simulator + energy model; run_online streams
+                the trace through the serving subsystem (``repro.online``:
+                router / drift detector / failover) with down-up events
   workloads   — Random / Snowflake / ISPD-like / TPC-H-hetero generators
   placement_service — production fit/refit API with hierarchical (pod/host) span
   expert_placement  — MoE expert->EP-rank placement from routing traces
@@ -23,6 +25,7 @@ from .setcover import (  # noqa: F401
     batched_spans_csr,
     cover_for_query,
     greedy_set_cover,
+    queries_to_csr,
     query_span,
     spans_for_workload,
 )

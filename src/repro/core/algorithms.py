@@ -352,6 +352,11 @@ class _LMBRState:
             self._edge_mask[parts, np.repeat(np.arange(E), counts)] = True
         self.cov_epoch = np.zeros(n, dtype=np.int64)
         self.mem_epoch = np.zeros(n, dtype=np.int64)
+        sizes = np.diff(hg.edge_ptr)
+        self._esz_mean = float(sizes.mean()) if E else 0.0
+        # pairwise shared-edge counts for the "auto" peel dispatch: built on
+        # first use, then maintained by rank-k updates in recompute_edges
+        self._shared_cnt: np.ndarray | None = None
         self._loads = pl.partition_weights()
         self._gain_cache: dict[tuple[int, int], tuple] = {}
         self.stats = dict(gain_calls=0, gain_cache_hits=0, moves=0)
@@ -398,6 +403,10 @@ class _LMBRState:
             return
         _, pidx = self.hg.pin_indices(edges)
         old_pp = self.sm.pin_parts[pidx].copy()
+        old_sub = (
+            self._edge_mask[:, edges].astype(np.int64)
+            if self._shared_cnt is not None else None
+        )
         self._edge_mask[:, edges] = False
         self.sm.refresh_edges(edges)
         new_pp = self.sm.pin_parts[pidx]
@@ -410,6 +419,9 @@ class _LMBRState:
             if counts.sum() else np.zeros(0, dtype=np.int64)
         )
         self._edge_mask[parts, np.repeat(edges, counts)] = True
+        if old_sub is not None:
+            new_sub = self._edge_mask[:, edges].astype(np.int64)
+            self._shared_cnt += new_sub @ new_sub.T - old_sub @ old_sub.T
         changed = old_pp != new_pp
         if changed.any():
             touched = np.unique(
@@ -430,10 +442,30 @@ class _LMBRState:
         the pair depends on moved, else return the memoized (gain, items)."""
         return self.max_gain_many([(src, dest)])[(src, dest)]
 
+    def _peel_width_bounds(self, pairs: list[tuple[int, int]]) -> np.ndarray:
+        """Per-pair degree-matrix width estimate for the ``lmbr_peel="auto"``
+        size dispatch: (shared-edge count) * (mean edge size).  The count
+        matrix is built once (edge-mask Gram product) and then maintained by
+        rank-k updates in `recompute_edges`, so each estimate is an O(1)
+        lookup — the dispatch signal never costs O(E) per pair.  The signal
+        only picks a backend; both backends are bit-identical."""
+        if self._shared_cnt is None:
+            m = self._edge_mask.astype(np.int64)
+            self._shared_cnt = m @ m.T
+        srcs = np.fromiter((s for s, _ in pairs), dtype=np.int64,
+                           count=len(pairs))
+        dests = np.fromiter((d for _, d in pairs), dtype=np.int64,
+                            count=len(pairs))
+        return self._shared_cnt[srcs, dests] * self._esz_mean
+
     def max_gain_many(self, pairs: list[tuple[int, int]]):
         """Epoch-cached batch gain evaluation.  Cache hits are answered from
         the memo; the misses run through ONE lockstep batched peel (or the
-        pure-Python oracle pair-by-pair under ``lmbr_peel="reference"``).
+        pure-Python oracle pair-by-pair under ``lmbr_peel="reference"``;
+        ``"auto"`` routes pairs whose degree-matrix width estimate is below
+        ``flags.FLAGS["lmbr_peel_threshold"]`` to the oracle — on sparse
+        near-span-1 workloads tiny peels beat the batch-array assembly —
+        and batches the rest; all backends are bit-identical).
         Returns {pair: (gain, items)} covering every requested pair."""
         self.stats["gain_calls"] += len(pairs)
         use_cache = _flags.FLAGS.get("lmbr_gain_cache", True)
@@ -452,10 +484,21 @@ class _LMBRState:
             misses.append(key)
             pending.add(key)
         if misses:
-            if _flags.FLAGS.get("lmbr_peel", "vector") == "reference":
+            backend = _flags.FLAGS.get("lmbr_peel", "vector")
+            if backend == "reference":
                 computed = {
                     k: _lmbr_max_gain_reference(self, *k) for k in misses
                 }
+            elif backend == "auto":
+                thresh = int(_flags.FLAGS.get("lmbr_peel_threshold", 256))
+                bounds = self._peel_width_bounds(misses)
+                computed = {
+                    k: _lmbr_max_gain_reference(self, *k)
+                    for k, b in zip(misses, bounds) if b < thresh
+                }
+                big = [k for k, b in zip(misses, bounds) if b >= thresh]
+                if big:
+                    computed.update(_lmbr_gain_batch(self, big))
             else:
                 computed = _lmbr_gain_batch(self, misses)
             if use_cache:

@@ -26,7 +26,13 @@ import numpy as np
 
 from .algorithms import ALGORITHMS, lmbr, min_partitions
 from .hypergraph import Hypergraph
-from .setcover import Placement, cover_for_query, greedy_set_cover
+from .setcover import (
+    Placement,
+    batched_spans_csr,
+    cover_for_query,
+    greedy_set_cover,
+    queries_to_csr,
+)
 
 __all__ = ["PlacementPlan", "HierarchicalPlan", "PlacementService"]
 
@@ -47,10 +53,21 @@ class PlacementPlan:
         return cover_for_query(np.asarray(query, dtype=np.int64), self.member)
 
     def span(self, query: Sequence[int]) -> int:
-        return len(greedy_set_cover(np.asarray(query, dtype=np.int64), self.member))
+        """Greedy cover size of one query (item set; duplicate ids are
+        deduplicated like `Hypergraph` edges).  Batched engine, bit-identical
+        to `greedy_set_cover` on the deduplicated query."""
+        return int(self.spans([query])[0])
+
+    def spans(self, queries: Sequence[Sequence[int]]) -> np.ndarray:
+        """Spans of many queries in ONE batched engine call (the per-query
+        reference loop this replaces is `greedy_set_cover` per query)."""
+        ptr, nodes = queries_to_csr(
+            [np.unique(np.asarray(q, dtype=np.int64)) for q in queries]
+        )
+        return batched_spans_csr(ptr, nodes, self.member)
 
     def avg_span(self, queries: Sequence[Sequence[int]]) -> float:
-        return float(np.mean([self.span(q) for q in queries])) if queries else 0.0
+        return float(self.spans(queries).mean()) if len(queries) else 0.0
 
     def as_placement(self) -> Placement:
         return Placement(self.member, self.capacity, self.node_weights)

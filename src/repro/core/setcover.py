@@ -48,6 +48,7 @@ from .. import flags as _flags
 
 __all__ = [
     "Placement",
+    "queries_to_csr",
     "greedy_set_cover",
     "cover_for_query",
     "query_span",
@@ -59,6 +60,19 @@ __all__ = [
 ]
 
 _WORD = 64
+
+
+def queries_to_csr(queries) -> "tuple[np.ndarray, np.ndarray]":
+    """CSR (ptr, nodes) of a list of queries (each an int sequence).  Pure
+    packing — callers wanting set semantics deduplicate first (Hypergraph
+    CSR edges and the online router's inputs already are)."""
+    lists = [np.asarray(q, dtype=np.int64) for q in queries]
+    ptr = np.zeros(len(lists) + 1, dtype=np.int64)
+    ptr[1:] = np.cumsum([len(q) for q in lists])
+    nodes = (
+        np.concatenate(lists) if lists else np.zeros(0, dtype=np.int64)
+    )
+    return ptr, nodes
 
 
 @dataclasses.dataclass
@@ -218,6 +232,27 @@ def _accel_backend() -> str | None:
     return None if _ACCEL_BACKEND == "none" else _ACCEL_BACKEND
 
 
+def _gain_matrix_w1(codes1: np.ndarray, rem1: np.ndarray) -> np.ndarray:
+    """Single-word variant of `_gain_matrix`: codes1 (A, N) uint64, rem1
+    (A,) -> (A, N) gains.  Same per-round dispatch rule; the numpy path
+    skips the word-axis reduction (gain values are identical, only the
+    dtype differs — argmax/zero tests are unaffected)."""
+    backend = _flags.FLAGS.get("span_backend", "auto")
+    if backend == "auto":
+        thresh = int(_flags.FLAGS.get("span_dispatch_threshold", 48_000))
+        backend = "numpy" if codes1.size < thresh else (
+            _accel_backend() or "numpy"
+        )
+    if backend == "numpy":
+        return np.bitwise_count(codes1 & rem1[:, None])
+    try:
+        from ..kernels.span_gain.ops import span_gains
+
+        return span_gains(codes1[:, :, None], rem1[:, None], force=backend)
+    except Exception:
+        return np.bitwise_count(codes1 & rem1[:, None])
+
+
 def _gain_matrix(codes: np.ndarray, rem: np.ndarray) -> np.ndarray:
     """Per-bucket backend dispatch for one greedy round.
 
@@ -278,17 +313,35 @@ def _cover_bucket(edge_ptr, edge_nodes, member, b_idx, W, spans, pin_parts):
     pin_e = np.repeat(np.arange(B, dtype=np.int64), sizes)
     pos = np.arange(P, dtype=np.int64) - loc_ptr[pin_e]
     pins = edge_nodes[edge_ptr[b_idx][pin_e] + pos]
-    wid = pos >> 6
-    bit = (pos & 63).astype(np.uint64)
 
     # pack the per-query membership submatrices into uint64 words
-    shifted = member[:, pins].astype(np.uint64) << bit[None, :]  # (N, P)
-    seg = pin_e * W + wid
-    starts = np.flatnonzero(
-        np.concatenate([[True], seg[1:] != seg[:-1]])
-    )
     codes = np.zeros((B, member.shape[0], W), dtype=np.uint64)
-    if P:
+    L = int(sizes.max()) if P else 0
+    if P and W == 1 and B * L * member.shape[0] <= 4_000_000:
+        # single-word fast pack: pad each query's pins to (B, Lmax) indices
+        # into a transposed member copy (dummy index -> all-False row) and
+        # SUM the per-slot bit weights — bits are distinct within a query,
+        # so the sum is exactly the OR, with no segment reduce.  The dense
+        # (B, Lmax, N) temporaries make this a microbatch-sized path; huge
+        # one-shot buckets (full-trace replays) keep the reduceat pack,
+        # whose memory tracks total pins instead
+        mt = np.zeros((member.shape[1] + 1, member.shape[0]), dtype=bool)
+        mt[:-1] = member.T
+        pinpad = np.full((B, L), member.shape[1], dtype=np.int64)
+        pinpad[pin_e, pos] = pins
+        bits_w = np.uint64(1) << np.arange(L, dtype=np.uint64)
+        codes[:, :, 0] = (
+            mt[pinpad] * bits_w[None, :, None]
+        ).sum(axis=1, dtype=np.uint64)
+    elif P:
+        wid = pos >> 6
+        bit = (pos & 63).astype(np.uint64)
+        # bool * (1 << bit) fuses the astype+shift into one temporary
+        shifted = member[:, pins] * (np.uint64(1) << bit)[None, :]  # (N, P)
+        seg = pin_e * W + wid
+        starts = np.flatnonzero(
+            np.concatenate([[True], seg[1:] != seg[:-1]])
+        )
         red = np.bitwise_or.reduceat(shifted, starts, axis=1)  # (N, G)
         codes[pin_e[starts], :, wid[starts]] = red.T
 
@@ -300,28 +353,57 @@ def _cover_bucket(edge_ptr, edge_nodes, member, b_idx, W, spans, pin_parts):
         rem[:, j] = np.where(bits >= _WORD, np.uint64(0xFFFFFFFFFFFFFFFF), low)
 
     rounds: list[tuple[np.ndarray, np.ndarray]] = []
-    active = np.flatnonzero(rem.any(axis=1))
-    while len(active):
-        sub = codes[active]                     # (A, N, W)
-        g = _gain_matrix(sub, rem[active])      # (A, N)
-        p = g.argmax(axis=1)                    # ties -> lowest partition id
-        gmax = g[np.arange(len(p)), p]
-        if (gmax == 0).any():
-            bad = int(active[int(np.argmax(gmax == 0))])
-            e = int(b_idx[bad])
-            raise ValueError(
-                f"query {e} contains items not stored on any partition"
-            )
-        spans[b_idx[active]] += 1
-        rounds.append((active, p))
-        newly = sub[np.arange(len(p)), p]       # (A, W)
-        rem[active] &= ~newly
-        active = active[rem[active].any(axis=1)]
+    if W == 1:
+        # single-word fast path (queries of <= 64 pins, the dominant online
+        # serving shape): same greedy rounds with the word axis squeezed and
+        # the still-active queries kept COMPACT (codes_a/rem_a/eidx shrink
+        # together), so each round runs a minimal number of numpy dispatches
+        # — identical gains, argmax, and tie-breaks to the generic loop
+        eidx = np.flatnonzero(rem[:, 0])
+        codes_a = codes[eidx, :, 0]
+        rem_a = rem[eidx, 0]
+        ar = np.arange(B, dtype=np.int64)
+        while len(eidx):
+            g = _gain_matrix_w1(codes_a, rem_a)
+            p = g.argmax(axis=1)                # ties -> lowest partition id
+            a = ar[: len(p)]
+            gmax = g[a, p]
+            if not gmax.all():
+                bad = int(eidx[int(np.argmax(gmax == 0))])
+                e = int(b_idx[bad])
+                raise ValueError(
+                    f"query {e} contains items not stored on any partition"
+                )
+            rounds.append((eidx, p))
+            rem_a &= ~codes_a[a, p]
+            alive = rem_a != 0
+            if not alive.all():
+                eidx = eidx[alive]
+                codes_a = codes_a[alive]
+                rem_a = rem_a[alive]
+    else:
+        active = np.flatnonzero(rem.any(axis=1))
+        while len(active):
+            sub = codes[active]                     # (A, N, W)
+            g = _gain_matrix(sub, rem[active])      # (A, N)
+            p = g.argmax(axis=1)                    # ties -> lowest partition id
+            gmax = g[np.arange(len(p)), p]
+            if (gmax == 0).any():
+                bad = int(active[int(np.argmax(gmax == 0))])
+                e = int(b_idx[bad])
+                raise ValueError(
+                    f"query {e} contains items not stored on any partition"
+                )
+            rounds.append((active, p))
+            newly = sub[np.arange(len(p)), p]       # (A, W)
+            rem[active] &= ~newly
+            active = active[rem[active].any(axis=1)]
 
     R = len(rounds)
     ch = np.full((B, R), -1, dtype=np.int64)
     for r, (ai, pi) in enumerate(rounds):
         ch[ai, r] = pi
+    spans[b_idx] = (ch >= 0).sum(axis=1)
 
     if pin_parts is not None and P:
         assigned = np.full(P, -1, dtype=np.int64)

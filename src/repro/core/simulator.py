@@ -54,7 +54,7 @@ class EnergyModel:
 @dataclasses.dataclass
 class SimulationResult:
     algorithm: str
-    spans: np.ndarray               # (NQ,)
+    spans: np.ndarray               # (NQ,) spans of the SERVED queries
     loads: np.ndarray               # (N,) storage load (weight)
     access_load: np.ndarray         # (N,) #query-accesses per partition
     energy_joules: float
@@ -62,6 +62,7 @@ class SimulationResult:
     placement_seconds: float
     replication_factor: float
     placement_stats: dict | None = None  # fitter diagnostics (Placement.stats)
+    online_stats: dict | None = None     # serving counters (run_online)
 
     @property
     def avg_span(self) -> float:
@@ -93,11 +94,36 @@ class SimulationResult:
             out.update(
                 {f"fit_{k}": v for k, v in self.placement_stats.items()}
             )
+        if self.online_stats:
+            # serving-side counters (router / drift / failover), same flow:
+            # served_queries, plan_swaps, repaired_items, degraded_queries, ...
+            out.update(self.online_stats)
         return out
 
 
+def _traffic_gb(edge_ptr, edge_nodes, spans, cover_ptr, cover_parts,
+                pin_parts, node_weights, item_gb):
+    """Per-query (scanned_gb, shipped_gb) from a batched cover: the
+    coordinator is the first chosen partition, every other cover member
+    ships the bytes it serves."""
+    w_pins = node_weights[edge_nodes]
+    cw = np.concatenate([[0.0], np.cumsum(w_pins)])
+    scanned = (cw[edge_ptr[1:]] - cw[edge_ptr[:-1]]) * item_gb
+    first = np.full(len(edge_ptr) - 1, -1, dtype=np.int64)
+    nz = spans > 0
+    first[nz] = cover_parts[cover_ptr[:-1][nz]]
+    local_w = np.where(
+        pin_parts == np.repeat(first, np.diff(edge_ptr)), w_pins, 0.0,
+    )
+    cl = np.concatenate([[0.0], np.cumsum(local_w)])
+    shipped = scanned - (cl[edge_ptr[1:]] - cl[edge_ptr[:-1]]) * item_gb
+    return scanned, shipped
+
+
 class Simulator:
-    """Paper §5's simulator: place once, replay the trace."""
+    """Paper §5's simulator: place once, replay the trace (`run`), or serve
+    it online through the streaming router with failure/drift events
+    (`run_online`)."""
 
     def __init__(
         self,
@@ -140,21 +166,11 @@ class Simulator:
         access_load = np.bincount(
             cov.cover_parts, minlength=self.n
         ).astype(np.float64)
-        w_pins = hg.node_weights[replay.edge_nodes]
-        cw = np.concatenate([[0.0], np.cumsum(w_pins)])
-        scanned = (cw[replay.edge_ptr[1:]] - cw[replay.edge_ptr[:-1]]) \
-            * self.item_gb
         # coordinator = first chosen partition; others ship their reads
-        first = np.full(replay.num_edges, -1, dtype=np.int64)
-        nz = spans > 0
-        first[nz] = cov.cover_parts[cov.cover_ptr[:-1][nz]]
-        local_w = np.where(
-            cov.pin_parts == np.repeat(first, np.diff(replay.edge_ptr)),
-            w_pins, 0.0,
+        scanned, shipped = _traffic_gb(
+            replay.edge_ptr, replay.edge_nodes, spans, cov.cover_ptr,
+            cov.cover_parts, cov.pin_parts, hg.node_weights, self.item_gb,
         )
-        cl = np.concatenate([[0.0], np.cumsum(local_w)])
-        shipped = scanned - (cl[replay.edge_ptr[1:]] - cl[replay.edge_ptr[:-1]]) \
-            * self.item_gb
         total_shipped = float(shipped.sum())
         total_energy = float(
             self.energy.query_energy(scanned, spans, shipped).sum()
@@ -169,6 +185,184 @@ class Simulator:
             placement_seconds=dt,
             replication_factor=pl.replication_factor(),
             placement_stats=pl.stats,
+        )
+
+    def run_online(
+        self,
+        hg: Hypergraph,
+        algorithm: Callable[..., Placement],
+        name: str | None = None,
+        trace: Hypergraph | None = None,
+        events=None,
+        service=None,
+        refit_moves: int = 256,
+        repair_k: int = 1,
+        auto_repair: bool = True,
+        validate: bool = True,
+        **algo_kwargs,
+    ) -> SimulationResult:
+        """Event-capable online replay: fit once, then SERVE the trace
+        through the streaming router (`repro.online.ReplicaRouter`) in
+        microbatches of ``flags.FLAGS["router_microbatch"]``.
+
+        ``events`` is an iterable of ``(query_index, kind, arg)`` applied
+        just before the query at that trace position is served:
+
+          * ``("down", p)`` — partition p fails (membership row masked); with
+            ``auto_repair`` the failover manager immediately re-replicates
+            items that fell below ``repair_k`` live copies into surviving
+            free space (span-aware gain).  Queries that still reference an
+            uncovered item are counted ``degraded_queries``, not served.
+          * ``("up", p)`` — p's saved replicas come back.
+          * ``("repair", k)`` — explicit repair pass to k live copies.
+
+        Passing a `PlacementService` as ``service`` arms the drift detector:
+        after each microbatch the windowed avg span is compared against the
+        fit-time baseline and a regression past
+        ``flags.FLAGS["drift_threshold"]`` triggers an incremental refit on
+        the sketch window, hot-swapped into the router between microbatches
+        (deferred while any partition is down).  The returned result's
+        ``spans`` cover the served queries only, and ``summary()`` carries
+        the serving counters (served_queries, plan_swaps, repaired_items,
+        degraded_queries, ...)."""
+        from .. import flags as _flags
+        from ..online import DriftDetector, FailoverManager, ReplicaRouter
+        from .placement_service import PlacementPlan
+        from .setcover import batched_spans_csr
+
+        with hpa_mod.fresh_partition_cache():
+            t0 = time.perf_counter()
+            pl = algorithm(hg, self.n, self.capacity, **algo_kwargs)
+            dt = time.perf_counter() - t0
+        if validate:
+            pl.validate()
+        replay = trace if trace is not None else hg
+        algo_name = name or getattr(algorithm, "__name__", "custom")
+        # the live layout: plan, router and failover manager SHARE the
+        # member matrix, so masking/repair is visible to the next microbatch
+        live = Placement(pl.member, self.capacity, pl.node_weights)
+        router = ReplicaRouter(live.member)
+        failover = FailoverManager(live)
+        detector = None
+        if service is not None:
+            detector = DriftDetector(
+                PlacementPlan(pl.member, self.capacity, pl.node_weights,
+                              algo_name),
+                service, refit_moves=refit_moves,
+            )
+            detector.set_baseline(float(batched_spans_csr(
+                hg.edge_ptr, hg.edge_nodes, pl.member
+            ).mean()) if hg.num_edges else 0.0)
+
+        def _repair_workload() -> Hypergraph:
+            # repair against the live window when the sketch has traffic,
+            # else against the fit workload
+            if detector is not None and len(detector.sketch):
+                return detector.sketch.to_hypergraph()
+            return hg
+
+        def _apply(kind: str, arg) -> None:
+            if kind == "down":
+                failover.partition_down(int(arg))
+                if auto_repair:
+                    failover.repair(_repair_workload(), k=repair_k)
+            elif kind == "up":
+                failover.partition_up(int(arg))
+            elif kind == "repair":
+                failover.repair(_repair_workload(),
+                                k=int(arg) if arg else repair_k)
+            else:
+                raise ValueError(f"unknown online event kind {kind!r}")
+
+        ev = sorted(
+            ((int(at), kind, arg) for at, kind, arg in (events or [])),
+            key=lambda t: t[0],
+        )
+        ev_i = 0
+        nq = replay.num_edges
+        mb = max(1, int(_flags.FLAGS.get("router_microbatch", 384)))
+        pos = 0
+        degraded = 0
+        spans_parts: list[np.ndarray] = []
+        total_energy = 0.0
+        total_shipped = 0.0
+        while pos < nq:
+            while ev_i < len(ev) and ev[ev_i][0] <= pos:
+                _apply(ev[ev_i][1], ev[ev_i][2])
+                ev_i += 1
+            stop = min(pos + mb, nq)
+            if ev_i < len(ev):
+                stop = min(stop, max(ev[ev_i][0], pos + 1))
+            ptr = replay.edge_ptr[pos: stop + 1] - replay.edge_ptr[pos]
+            nodes = replay.edge_nodes[
+                replay.edge_ptr[pos]: replay.edge_ptr[stop]
+            ]
+            ok = failover.serveable_mask(ptr, nodes)
+            if not ok.all():
+                degraded += int((~ok).sum())
+                sptr, sidx = Hypergraph(
+                    ptr, nodes, live.node_weights,
+                    np.ones(len(ptr) - 1),
+                ).pin_indices(np.flatnonzero(ok))
+                ptr, nodes = sptr, nodes[sidx]
+            batch = router.route_csr(ptr, nodes)
+            spans_parts.append(batch.spans)
+            scanned, shipped = _traffic_gb(
+                batch.edge_ptr, batch.edge_nodes, batch.spans,
+                batch.cover_ptr, batch.cover_parts, batch.pin_parts,
+                live.node_weights, self.item_gb,
+            )
+            total_energy += float(
+                self.energy.query_energy(scanned, batch.spans, shipped).sum()
+            )
+            total_shipped += float(shipped.sum())
+            if detector is not None:
+                detector.observe(
+                    [nodes[ptr[i]: ptr[i + 1]] for i in range(len(ptr) - 1)],
+                    batch.spans,
+                )
+                # hot-swap between microbatches; deferred during an outage
+                if not failover.down_partitions and detector.should_refit():
+                    new_plan = detector.refit()
+                    router.swap_plan(new_plan.member)
+                    live = new_plan.as_placement()
+                    failover.rebase(live)
+            pos = stop
+        while ev_i < len(ev):  # events scheduled at/after the trace end
+            _apply(ev[ev_i][1], ev[ev_i][2])
+            ev_i += 1
+
+        online_stats = dict(
+            served_queries=int(router.stats["served_queries"]),
+            microbatches=int(router.stats["microbatches"]),
+            plan_swaps=int(router.stats["plan_swaps"]),
+            degraded_queries=int(degraded),
+            partitions_down=int(failover.stats["partitions_down"]),
+            repaired_items=int(failover.stats["repaired_items"]),
+            unrepairable_items=int(failover.stats["unrepairable_items"]),
+        )
+        if detector is not None:
+            online_stats.update(
+                drift_fires=int(detector.stats["drift_fires"]),
+                refits=int(detector.stats["refits"]),
+                windowed_avg_span=round(detector.windowed_avg_span, 4),
+            )
+        spans = (
+            np.concatenate(spans_parts) if spans_parts
+            else np.zeros(0, dtype=np.int64)
+        )
+        live = failover.pl  # the final hot-swapped layout
+        return SimulationResult(
+            algorithm=algo_name,
+            spans=spans,
+            loads=live.partition_weights(),
+            access_load=router.load.copy(),
+            energy_joules=total_energy,
+            shipped_gb=total_shipped,
+            placement_seconds=dt,
+            replication_factor=live.replication_factor(),
+            placement_stats=pl.stats,
+            online_stats=online_stats,
         )
 
     def compare(

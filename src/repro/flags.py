@@ -50,6 +50,31 @@ FLAGS = {
     # (cover/pin-attribution epoch of either side, membership epoch of the
     # destination).  Exactness-neutral; off reproduces the uncached engine.
     "lmbr_gain_cache": True,
+    # hybrid-peel crossover for ``lmbr_peel="auto"``: a candidate (src, dest)
+    # pair whose degree-matrix width estimate (shared-edge count * mean edge
+    # size, an O(1) lookup off the maintained pair-count matrix) is below
+    # this runs the pure-Python reference peel — on sparse near-span-1
+    # workloads (fig9 circuits) tiny peels beat the batch-array assembly.
+    # Both backends are bit-identical, so this is a pure perf knob;
+    # calibrated by benchmarks/bench_lmbr.py's vectorized-auto rows.
+    "lmbr_peel_threshold": 256,
+    # online router: queries per batched_cover_csr call in the streaming
+    # replica-selection router (repro.online.ReplicaRouter).  Calibrated by
+    # benchmarks/bench_online.py's router sweep: big enough to amortize the
+    # per-call bitset packing, small enough that every gain round stays in
+    # the numpy band of the span dispatch rule.
+    "router_microbatch": 384,
+    # online router: load-aware tie-break.  Off (default) the router is
+    # bit-identical to per-query cover_for_query (ties -> lowest partition
+    # id); on, same-gain covers prefer the partition with the lowest entry in
+    # the router's running access-load ledger (power-of-two-choices style).
+    "router_balance": False,
+    # drift detector: sliding window size W (queries) for the workload sketch
+    # and the windowed avg_span monitor.
+    "drift_window": 512,
+    # drift detector: refit trigger — fires when the windowed avg_span
+    # exceeds (fit-time baseline) * drift_threshold.
+    "drift_threshold": 1.25,
 }
 
 
@@ -72,13 +97,23 @@ def set_variant(spec: str):
             FLAGS["moe_cf"] = float(part[2:])
         elif part.startswith("spanth"):
             FLAGS["span_dispatch_threshold"] = int(part[len("spanth"):])
+        elif part.startswith("peelth"):
+            FLAGS["lmbr_peel_threshold"] = int(part[len("peelth"):])
         elif part.startswith("peel"):
             backend = part[len("peel"):]
-            if backend not in ("vector", "reference"):
+            if backend not in ("vector", "reference", "auto"):
                 raise ValueError(f"unknown lmbr peel backend {backend!r}")
             FLAGS["lmbr_peel"] = backend
         elif part.startswith("lmbrcache"):
             FLAGS["lmbr_gain_cache"] = bool(int(part[len("lmbrcache"):]))
+        elif part.startswith("routerbal"):
+            FLAGS["router_balance"] = bool(int(part[len("routerbal"):]))
+        elif part.startswith("routermb"):
+            FLAGS["router_microbatch"] = int(part[len("routermb"):])
+        elif part.startswith("driftw"):
+            FLAGS["drift_window"] = int(part[len("driftw"):])
+        elif part.startswith("driftth"):
+            FLAGS["drift_threshold"] = float(part[len("driftth"):])
         elif part.startswith("span"):
             backend = part[len("span"):]
             if backend not in ("auto", "numpy", "jax", "pallas"):
@@ -92,4 +127,6 @@ def reset():
     FLAGS.update(mla_decomp=False, accum_steps=1, sp=False, sp_attn=False,
                  moe_cf=None, span_backend="auto",
                  span_dispatch_threshold=48_000, lmbr_peel="vector",
-                 lmbr_gain_cache=True)
+                 lmbr_gain_cache=True, lmbr_peel_threshold=256,
+                 router_microbatch=384, router_balance=False,
+                 drift_window=512, drift_threshold=1.25)

@@ -1,0 +1,21 @@
+"""repro.online — online serving over the placement engine.
+
+The batch pipeline (``repro.core``) fits a layout and replays a static
+trace; this package serves queries AGAINST that layout while it changes:
+
+  router    — streaming replica-selection router: microbatched
+              batched_cover_csr calls, optional load-aware tie-break
+              (``flags.FLAGS["router_balance"]``)
+  drift     — sliding-window workload sketch + windowed-avg-span drift
+              trigger invoking PlacementService.refit (hot-swap between
+              microbatches)
+  failover  — partition down/up masking, coverage audit, span-aware repair
+              of lost replicas into surviving free space
+
+`Simulator.run_online` (``repro.core.simulator``) wires the three into an
+event-capable trace replay; `benchmarks/bench_online.py` measures them.
+"""
+
+from .router import ReplicaRouter, RoutedBatch, queries_to_csr  # noqa: F401
+from .drift import DriftDetector, WorkloadSketch  # noqa: F401
+from .failover import FailoverManager  # noqa: F401

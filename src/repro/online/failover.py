@@ -1,0 +1,184 @@
+"""Span-aware failover: partition down/up masking, coverage audit, repair.
+
+Replication exists for fault tolerance; the paper exploits it for
+co-location.  This module closes the loop in the other direction: when a
+partition dies, the layout loses both a fault domain and part of its
+co-location structure, and the repair should restore the former without
+squandering the latter.
+
+`FailoverManager` wraps the LIVE `Placement` the router serves from (the
+member matrix is mutated in place, so masking and repair are visible to the
+next router microbatch):
+
+* `partition_down(p)` saves p's membership row and zeroes it; queries then
+  cover against surviving replicas only.  Items whose last replica lived on
+  p are reported lost.
+* `coverage_audit` / `serveable_mask` identify lost items and the queries
+  that cannot be served until repair (the replay counts these as degraded
+  rather than crashing the batched engine's unplaced-item ValueError).
+* `repair(hg, k)` re-replicates under-replicated items into surviving free
+  space by LMBR-style gain: items are processed hottest-first (descending
+  weighted incident-edge degree, ties -> lowest item id) and each new copy
+  goes to the surviving partition with the largest co-location benefit —
+  the summed weight of the item's incident edges that already read another
+  item from that partition — so repair copies land where they keep spans
+  low.  Ties -> most free space, then lowest partition id; capacity is never
+  exceeded (items that fit nowhere stay lost and are reported).
+* `partition_up(p)` restores the saved row (the replicas come back; repair
+  copies made meanwhile simply remain as extra replicas).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.hypergraph import Hypergraph
+from ..core.setcover import Placement
+
+__all__ = ["FailoverManager"]
+
+
+class FailoverManager:
+    def __init__(self, placement: Placement):
+        self.pl = placement
+        self._saved: dict[int, np.ndarray] = {}
+        self._loads = placement.partition_weights()
+        self.stats = dict(
+            partitions_down=0, repaired_items=0, unrepairable_items=0,
+        )
+
+    # ------------------------------------------------------------- accessors
+    @property
+    def member(self) -> np.ndarray:
+        return self.pl.member
+
+    @property
+    def down_partitions(self) -> list[int]:
+        return sorted(self._saved)
+
+    def rebase(self, placement: Placement) -> None:
+        """Adopt a hot-swapped live placement (drift refit).  Only legal with
+        no partition down — refits are deferred during an outage."""
+        if self._saved:
+            raise RuntimeError("cannot rebase while partitions are down")
+        self.pl = placement
+        self._loads = placement.partition_weights()
+
+    # ------------------------------------------------------------ down / up
+    def partition_down(self, p: int) -> np.ndarray:
+        """Mask partition p's membership row.  Returns the items that lost
+        their LAST live replica (weight > 0)."""
+        p = int(p)
+        if p in self._saved:
+            raise ValueError(f"partition {p} is already down")
+        self._saved[p] = self.pl.member[p].copy()
+        self.pl.member[p] = False
+        self._loads[p] = 0.0
+        self.stats["partitions_down"] += 1
+        lost = (
+            self._saved[p]
+            & ~self.pl.member.any(axis=0)
+            & (self.pl.node_weights > 0)
+        )
+        return np.flatnonzero(lost)
+
+    def partition_up(self, p: int) -> None:
+        """Restore partition p's saved membership row."""
+        p = int(p)
+        if p not in self._saved:
+            raise ValueError(f"partition {p} is not down")
+        row = self._saved.pop(p)
+        self.pl.member[p] = row
+        self._loads[p] = float(self.pl.node_weights[row].sum())
+
+    # ---------------------------------------------------------------- audit
+    def uncovered_items(self) -> np.ndarray:
+        """Items with weight > 0 and no live replica."""
+        return np.flatnonzero(
+            ~self.pl.member.any(axis=0) & (self.pl.node_weights > 0)
+        )
+
+    def serveable_mask(self, edge_ptr, edge_nodes) -> np.ndarray:
+        """Per-CSR-query bool: True iff every pin has a live replica."""
+        edge_ptr = np.asarray(edge_ptr, dtype=np.int64)
+        edge_nodes = np.asarray(edge_nodes, dtype=np.int64)
+        bad = (~self.pl.member.any(axis=0))[edge_nodes].astype(np.int64)
+        cb = np.concatenate([[0], np.cumsum(bad)])
+        return (cb[edge_ptr[1:]] - cb[edge_ptr[:-1]]) == 0
+
+    def coverage_audit(self, hg: Hypergraph | None = None):
+        """(lost_items, affected_edge_ids) — edge ids only when a workload
+        hypergraph is given."""
+        lost = self.uncovered_items()
+        if hg is None:
+            return lost, None
+        affected = np.flatnonzero(
+            ~self.serveable_mask(hg.edge_ptr, hg.edge_nodes)
+        )
+        return lost, affected
+
+    # --------------------------------------------------------------- repair
+    def replica_counts(self) -> np.ndarray:
+        return self.pl.member.sum(axis=0)
+
+    def repair(self, hg: Hypergraph, k: int = 1,
+               items: np.ndarray | None = None) -> np.ndarray:
+        """Re-replicate under-replicated items into surviving free space.
+
+        Ensures every item with weight > 0 (or the explicit `items`) has at
+        least `k` live replicas where capacity allows.  Sequential greedy in
+        hottest-first order; each copy's destination maximizes co-location
+        benefit against the CURRENT live layout, so items repaired earlier
+        attract their co-accessed peers.  Returns the unique repaired item
+        ids; ``stats["repaired_items"]`` counts replica COPIES placed (== the
+        returned length for k=1, larger when one item needs several copies).
+        """
+        pl = self.pl
+        live_rows = np.ones(pl.num_partitions, dtype=bool)
+        live_rows[self.down_partitions] = False
+        if items is None:
+            need = np.flatnonzero(
+                (self.replica_counts() < k) & (pl.node_weights > 0)
+            )
+        else:
+            need = np.asarray(items, dtype=np.int64)
+        if not len(need):
+            return need
+        deg = hg.degrees()
+        order = need[np.argsort(-deg[need], kind="stable")]
+        node_ptr, node_edges = hg.incidence()
+        repaired: list[int] = []
+        for v in order:
+            v = int(v)
+            while int(pl.member[live_rows, v].sum()) < k:
+                wv = float(pl.node_weights[v])
+                fits = (
+                    live_rows
+                    & (self._loads + wv <= pl.capacity + 1e-9)
+                    & ~pl.member[:, v]
+                )
+                if not fits.any():
+                    self.stats["unrepairable_items"] += 1
+                    break
+                ev = node_edges[node_ptr[v]: node_ptr[v + 1]]
+                benefit = np.zeros(pl.num_partitions, dtype=np.float64)
+                for e in ev:
+                    pins = hg.edge(int(e))
+                    pins = pins[pins != v]
+                    if len(pins):
+                        benefit += float(hg.edge_weights[e]) * (
+                            pl.member[:, pins].any(axis=1)
+                        )
+                # max benefit; ties -> most free space, then lowest id
+                cand = np.flatnonzero(fits)
+                key = np.lexsort((
+                    cand,                       # lowest id last resort
+                    self._loads[cand],          # least loaded
+                    -benefit[cand],             # max co-location benefit
+                ))
+                d = int(cand[key[0]])
+                pl.member[d, v] = True
+                self._loads[d] += wv
+                repaired.append(v)
+        self.stats["repaired_items"] += len(repaired)
+        return np.asarray(sorted(set(repaired)), dtype=np.int64)

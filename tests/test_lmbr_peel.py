@@ -205,3 +205,47 @@ def test_lmbr_warm_start_unchanged():
     out = lmbr(hg, 8, 20, seed=0, initial=pl0)
     # warm start only adds copies: the initial layout survives
     assert (out.member[pl0.member]).all()
+
+
+def test_peelauto_bit_identical_and_mixed_dispatch():
+    """The size-dispatched hybrid peel (`peelauto`) routes small pairs to the
+    reference and large ones to the batch — and is bit-identical to the pure
+    vectorized engine either way."""
+    wl = random_workload(num_items=120, num_queries=260, density=5, seed=2)
+    hg = wl.hypergraph
+    vec = lmbr(hg, 9, 25, seed=0)
+    for spec in ("peelauto", "peelauto+peelth1", "peelauto+peelth100000"):
+        flags.set_variant(spec)
+        try:
+            auto = lmbr(hg, 9, 25, seed=0)
+        finally:
+            flags.reset()
+        np.testing.assert_array_equal(vec.member, auto.member)
+        assert auto.stats["peel"] == "auto"
+        assert auto.stats["moves"] == vec.stats["moves"]
+
+
+def test_variant_validation_errors():
+    """set_variant rejects unknown backends/components instead of silently
+    accepting them."""
+    try:
+        for bad in ("peelbogus", "spanbogus", "routerbalX", "driftwx",
+                    "nonsense"):
+            with pytest.raises(ValueError):
+                flags.set_variant(bad)
+    finally:
+        flags.reset()
+
+
+def test_variant_roundtrip_online_knobs():
+    try:
+        flags.set_variant("peelauto+peelth64+routerbal1+routermb512"
+                          "+driftw256+driftth1.5")
+        assert flags.FLAGS["lmbr_peel"] == "auto"
+        assert flags.FLAGS["lmbr_peel_threshold"] == 64
+        assert flags.FLAGS["router_balance"] is True
+        assert flags.FLAGS["router_microbatch"] == 512
+        assert flags.FLAGS["drift_window"] == 256
+        assert flags.FLAGS["drift_threshold"] == 1.5
+    finally:
+        flags.reset()

@@ -1,0 +1,311 @@
+"""Tests for the online serving subsystem (repro.online): streaming router,
+workload-drift sketch/detector, span-aware failover, and the event-capable
+simulator replay."""
+
+import numpy as np
+import pytest
+
+from repro import flags
+from repro.core import (
+    ALGORITHMS,
+    Hypergraph,
+    PlacementService,
+    Simulator,
+    cover_for_query,
+    random_workload,
+    spans_for_workload,
+)
+from repro.core.setcover import Placement
+from repro.online import (
+    DriftDetector,
+    FailoverManager,
+    ReplicaRouter,
+    WorkloadSketch,
+)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    wl = random_workload(num_items=150, num_queries=400, density=6, seed=3)
+    pl = ALGORITHMS["lmbr"](wl.hypergraph, 10, 32, seed=0, max_moves=40)
+    pl.validate()
+    return wl.hypergraph, pl
+
+
+# ------------------------------------------------------------------- router
+def test_router_default_bit_identical(fitted):
+    """Default microbatched covers == per-query cover_for_query, including
+    replica attribution, across microbatch boundaries."""
+    hg, pl = fitted
+    router = ReplicaRouter(pl.member, microbatch=64)
+    batch = router.route_csr(hg.edge_ptr, hg.edge_nodes)
+    for e in range(hg.num_edges):
+        chosen, accessed = cover_for_query(hg.edge(e), pl.member)
+        assert list(batch.chosen(e)) == chosen
+        cov = batch.cover(e)
+        assert list(cov) == chosen  # greedy selection order preserved
+        for p, items in zip(chosen, accessed):
+            assert np.array_equal(cov[p], items)
+    assert router.stats["served_queries"] == hg.num_edges
+    assert router.stats["microbatches"] == -(-hg.num_edges // 64)
+
+
+def test_router_route_one_matches_batch(fitted):
+    hg, pl = fitted
+    router = ReplicaRouter(pl.member)
+    for e in range(0, hg.num_edges, 37):
+        chosen, cov = router.route_one(hg.edge(e))
+        ref_chosen, ref_accessed = cover_for_query(hg.edge(e), pl.member)
+        assert list(chosen) == ref_chosen
+        for p, items in zip(ref_chosen, ref_accessed):
+            assert np.array_equal(cov[p], items)
+
+
+def test_router_ledger_matches_access_load(fitted):
+    """The ledger counts one access per chosen cover member — the same unit
+    as SimulationResult.access_load."""
+    hg, pl = fitted
+    router = ReplicaRouter(pl.member, microbatch=128)
+    batch = router.route_csr(hg.edge_ptr, hg.edge_nodes)
+    expect = np.bincount(batch.cover_parts, minlength=pl.num_partitions)
+    assert np.array_equal(router.load, expect.astype(np.float64))
+
+
+def test_router_balanced_reduces_imbalance_without_span_cost():
+    """Skewed trace over a fully replicated layout: the default tie-break
+    hammers the lowest partition id; the balanced mode spreads accesses
+    across the equal-gain replicas at identical spans."""
+    rng = np.random.default_rng(0)
+    member = np.ones((4, 20), dtype=bool)  # every partition holds everything
+    queries = [np.unique(rng.integers(0, 20, size=3)) for _ in range(200)]
+    default = ReplicaRouter(member.copy(), microbatch=32, balance=False)
+    balanced = ReplicaRouter(member.copy(), microbatch=32, balance=True)
+    db = default.route(queries)
+    bb = balanced.route(queries)
+    assert balanced.load_imbalance() < default.load_imbalance()
+    assert float(bb.spans.mean()) <= float(db.spans.mean())
+    # every query is fully local somewhere -> spans stay 1 in both modes
+    assert db.spans.max() == bb.spans.max() == 1
+
+
+def test_router_balance_flag_and_swap(fitted):
+    hg, pl = fitted
+    flags.set_variant("routerbal1+routermb64")
+    try:
+        router = ReplicaRouter(pl.member)
+        assert router._cfg() == (64, True)
+    finally:
+        flags.reset()
+    router = ReplicaRouter(pl.member)
+    other = np.ones_like(pl.member)
+    router.swap_plan(other)
+    assert router.member is other
+    assert router.stats["plan_swaps"] == 1
+    with pytest.raises(ValueError):
+        router.swap_plan(np.ones((pl.num_partitions + 1, pl.num_items),
+                                 dtype=bool))
+
+
+# -------------------------------------------------------------------- drift
+def test_sketch_rebuild_equals_direct_hypergraph(fitted):
+    hg, _ = fitted
+    sketch = WorkloadSketch(hg.num_nodes, window=50)
+    empty = sketch.to_hypergraph()
+    assert empty.num_edges == 0 and empty.num_nodes == hg.num_nodes
+    for e in range(120):  # overflow the window: only the last 50 remain
+        sketch.observe(hg.edge(e))
+    assert sketch.full and len(sketch) == 50
+    rebuilt = sketch.to_hypergraph()
+    direct = Hypergraph.from_edges(
+        [hg.edge(e) for e in range(70, 120)], num_nodes=hg.num_nodes
+    )
+    assert np.array_equal(rebuilt.edge_ptr, direct.edge_ptr)
+    assert np.array_equal(rebuilt.edge_nodes, direct.edge_nodes)
+    assert np.array_equal(rebuilt.edge_weights, direct.edge_weights)
+
+
+def test_sketch_decay_weights(fitted):
+    hg, _ = fitted
+    sketch = WorkloadSketch(hg.num_nodes, window=4, decay=0.5)
+    for e in range(4):
+        sketch.observe(hg.edge(e))
+    assert np.allclose(sketch.edge_weights(), [0.125, 0.25, 0.5, 1.0])
+    assert np.allclose(sketch.to_hypergraph().edge_weights,
+                       [0.125, 0.25, 0.5, 1.0])
+
+
+def test_drift_detector_fires_and_refits():
+    wl_old = random_workload(num_items=120, num_queries=300, density=6, seed=2)
+    wl_new = random_workload(num_items=120, num_queries=300, density=6, seed=9)
+    svc = PlacementService("hpa", seed=0)  # no replication -> room to refit
+    plan = svc.fit(wl_old.queries, 120, 10, 30)
+    det = DriftDetector(plan, PlacementService("lmbr", seed=0), window=100,
+                        threshold=1.05, refit_moves=128)
+    det.seed_baseline_from(wl_old.queries)
+    # old traffic at the fit-time span level: no fire
+    det.observe(wl_old.queries[:100], plan.spans(wl_old.queries[:100]))
+    assert not det.should_refit()
+    # shifted traffic regresses the windowed span past the threshold
+    det.observe(wl_new.queries[:100], plan.spans(wl_new.queries[:100]))
+    assert det.windowed_avg_span > det.baseline * det.threshold
+    assert det.should_refit()
+    before = det.windowed_avg_span
+    new_plan = det.refit()
+    assert det.plan is new_plan
+    assert (new_plan.member >= plan.member).all()  # refit only adds copies
+    # re-baselined against the new plan on the drifted window: trigger re-arms
+    assert det.stats["refits"] == 1
+    assert new_plan.avg_span(wl_new.queries[:100]) <= before
+
+
+# ----------------------------------------------------------------- failover
+def test_failover_down_audit_up(fitted):
+    hg, pl = fitted
+    live = Placement(pl.member.copy(), pl.capacity, hg.node_weights)
+    fo = FailoverManager(live)
+    before = pl.member.copy()
+    sole = before[0] & ~(before[1:].any(axis=0))  # items only on partition 0
+    lost = fo.partition_down(0)
+    assert np.array_equal(lost, np.flatnonzero(sole))
+    assert not live.member[0].any()
+    assert np.array_equal(fo.uncovered_items(), np.flatnonzero(sole))
+    # queries touching a lost item are flagged unserveable
+    mask = fo.serveable_mask(hg.edge_ptr, hg.edge_nodes)
+    for e in range(hg.num_edges):
+        assert mask[e] == (not np.isin(hg.edge(e), lost).any())
+    fo.partition_up(0)
+    assert (live.member == before).all()
+    with pytest.raises(ValueError):
+        fo.partition_up(0)  # not down anymore
+
+
+def test_failover_repair_restores_coverage_within_capacity(fitted):
+    hg, pl = fitted
+    live = Placement(pl.member.copy(), pl.capacity, hg.node_weights)
+    fo = FailoverManager(live)
+    fo.partition_down(2)
+    fo.partition_down(5)
+    repaired = fo.repair(hg, k=1)
+    assert len(fo.uncovered_items()) == 0
+    live.validate()  # never exceeds capacity
+    assert fo.stats["repaired_items"] == len(repaired)
+    # repaired copies only land on surviving partitions
+    assert not live.member[2].any() and not live.member[5].any()
+
+
+def test_failover_repair_k_safety(fitted):
+    hg, pl = fitted
+    live = Placement(pl.member.copy(), pl.capacity * 4, hg.node_weights)
+    fo = FailoverManager(live)
+    fo.partition_down(0)
+    fo.repair(hg, k=2)
+    counts = live.member.sum(axis=0)
+    assert (counts[hg.node_weights > 0] >= 2).all()
+
+
+def test_failover_repair_respects_tight_capacity():
+    """With no free space anywhere, repair places nothing and reports the
+    items as unrepairable instead of blowing capacity."""
+    hg = Hypergraph.from_edges([[0, 1], [1, 2], [2, 3]], num_nodes=4)
+    member = np.array([[True, True, False, False],
+                       [False, False, True, True]])
+    live = Placement(member.copy(), 2.0, np.ones(4))
+    fo = FailoverManager(live)
+    lost = fo.partition_down(0)
+    assert np.array_equal(lost, [0, 1])
+    repaired = fo.repair(hg, k=1)
+    assert len(repaired) == 0
+    assert fo.stats["unrepairable_items"] == 2
+    assert (live.partition_weights() <= live.capacity + 1e-9).all()
+
+
+def test_failover_rebase_blocked_during_outage(fitted):
+    hg, pl = fitted
+    live = Placement(pl.member.copy(), pl.capacity, hg.node_weights)
+    fo = FailoverManager(live)
+    fo.partition_down(1)
+    with pytest.raises(RuntimeError):
+        fo.rebase(live)
+
+
+# --------------------------------------------------------------- run_online
+def test_run_online_matches_batch_replay(fitted):
+    """With no events and no drift service, online serving reproduces the
+    batch replay exactly: same spans, access load, energy, shipped bytes."""
+    hg, _ = fitted
+    sim = Simulator(10, 32)
+    batch = sim.run(hg, ALGORITHMS["lmbr"], name="lmbr", seed=0, max_moves=40)
+    online = sim.run_online(hg, ALGORITHMS["lmbr"], name="lmbr", seed=0,
+                            max_moves=40)
+    assert np.array_equal(batch.spans, online.spans)
+    assert np.array_equal(batch.access_load, online.access_load)
+    assert np.isclose(batch.energy_joules, online.energy_joules)
+    assert np.isclose(batch.shipped_gb, online.shipped_gb)
+    s = online.summary()
+    assert s["served_queries"] == hg.num_edges
+    assert s["degraded_queries"] == 0 and s["plan_swaps"] == 0
+
+
+def test_run_online_failure_event_counters(fitted):
+    hg, _ = fitted
+    sim = Simulator(10, 32)
+    res = sim.run_online(
+        hg, ALGORITHMS["lmbr"], name="lmbr", seed=0, max_moves=40,
+        events=[(100, "down", 0), (250, "up", 0)],
+    )
+    s = res.summary()
+    assert s["partitions_down"] == 1
+    assert s["served_queries"] + s["degraded_queries"] == hg.num_edges
+    assert s["degraded_queries"] == 0  # auto-repair restored coverage
+    assert s["repaired_items"] >= 0
+    assert len(res.spans) == s["served_queries"]
+
+
+def test_run_online_degraded_without_repair(fitted):
+    """auto_repair=False: queries touching items lost with the partition are
+    counted degraded (not served, no crash) until the partition returns."""
+    hg, pl = fitted
+    sole = pl.member[0] & ~(pl.member[1:].any(axis=0))
+    assert sole.any()  # partition 0 holds sole replicas in this fixture
+    sim = Simulator(10, 32)
+    res = sim.run_online(
+        hg, ALGORITHMS["lmbr"], name="lmbr", seed=0, max_moves=40,
+        events=[(0, "down", 0), (200, "up", 0)], auto_repair=False,
+    )
+    s = res.summary()
+    assert s["degraded_queries"] > 0
+    assert s["repaired_items"] == 0
+    assert s["served_queries"] + s["degraded_queries"] == hg.num_edges
+
+
+def test_run_online_drift_swaps_plan():
+    old = random_workload(num_items=120, num_queries=600, density=6, seed=2)
+    new = random_workload(num_items=120, num_queries=600, density=6, seed=9)
+    trace = Hypergraph.from_edges(
+        [old.hypergraph.edge(e) for e in range(200)]
+        + [new.hypergraph.edge(e) for e in range(600)],
+        num_nodes=120,
+    )
+    flags.set_variant("driftw128+driftth1.1+routermb64")
+    try:
+        sim = Simulator(10, 30)
+        res = sim.run_online(
+            old.hypergraph, ALGORITHMS["hpa"], name="hpa+drift", trace=trace,
+            service=PlacementService("lmbr", seed=0), refit_moves=128,
+            seed=0,
+        )
+    finally:
+        flags.reset()
+    s = res.summary()
+    assert s["drift_fires"] >= 1 and s["plan_swaps"] >= 1
+    assert s["refits"] == s["plan_swaps"]
+    # the final layout must still honor capacity after every hot swap
+    assert (res.loads <= 30 + 1e-9).all()
+
+
+def test_run_online_unknown_event_rejected(fitted):
+    hg, _ = fitted
+    sim = Simulator(10, 32)
+    with pytest.raises(ValueError):
+        sim.run_online(hg, ALGORITHMS["lmbr"], seed=0, max_moves=40,
+                       events=[(0, "explode", 1)])

@@ -6,8 +6,8 @@ import pytest
 
 from repro.core import (
     PlacementPlan, PlacementService, baseline_contiguous_placement,
-    mixture_batch_recipes, plan_expert_placement, plan_shard_placement,
-    random_workload, synthetic_routing_trace,
+    greedy_set_cover, mixture_batch_recipes, plan_expert_placement,
+    plan_shard_placement, random_workload, synthetic_routing_trace,
 )
 
 
@@ -31,6 +31,58 @@ def test_json_roundtrip(queries):
     plan2 = PlacementPlan.from_json(plan.to_json())
     assert (plan2.member == plan.member).all()
     assert plan2.capacity == plan.capacity
+
+
+def test_json_roundtrip_empty_partitions_and_weights():
+    """Round-trip must survive partitions holding nothing and heterogeneous
+    item weights (both exercised by TPC-H-style layouts)."""
+    member = np.zeros((4, 6), dtype=bool)
+    member[0, [0, 2]] = True
+    member[2, [1, 3, 4, 5]] = True  # partitions 1 and 3 stay empty
+    weights = np.array([0.5, 2.0, 1.25, 3.0, 0.25, 1.0])
+    plan = PlacementPlan(member, 7.5, weights, "custom")
+    plan2 = PlacementPlan.from_json(plan.to_json())
+    assert (plan2.member == member).all()
+    assert plan2.member.shape == member.shape  # empty rows preserved
+    assert plan2.capacity == 7.5
+    assert np.array_equal(plan2.node_weights, weights)
+    assert plan2.algorithm == "custom"
+
+
+def test_plan_spans_match_reference_loop(queries):
+    """The batched PlacementPlan.span/spans/avg_span equals the per-query
+    greedy_set_cover loop it replaced, element-wise."""
+    svc = PlacementService("lmbr", seed=0)
+    plan = svc.fit(queries, 120, 8, 30)
+    ref = np.array([
+        len(greedy_set_cover(np.asarray(q, dtype=np.int64), plan.member))
+        for q in queries
+    ])
+    assert np.array_equal(plan.spans(queries), ref)
+    assert plan.span(queries[7]) == int(ref[7])
+    assert plan.avg_span(queries) == float(ref.mean())
+    assert plan.avg_span([]) == 0.0
+
+
+def test_hierarchical_spans_and_weighted_span(queries):
+    """HierarchicalPlan.spans == hierarchical greedy cover (pods first, then
+    hosts restricted to the chosen pods); weighted_span is the DCN/ICI mix."""
+    svc = PlacementService("lmbr", seed=0)
+    hp = svc.fit_hierarchical(queries, 120, num_pods=2, hosts_per_pod=4,
+                              host_capacity=30)
+    for q in queries[:40]:
+        q = np.asarray(q, dtype=np.int64)
+        ps, hs = hp.spans(q)
+        pods = greedy_set_cover(q, hp.pod_plan.member)
+        assert ps == len(pods)
+        rows = [p * hp.hosts_per_pod + h for p in pods
+                for h in range(hp.hosts_per_pod)]
+        assert hs == len(greedy_set_cover(q, hp.host_member[rows]))
+        assert hp.weighted_span(q) == 8.0 * (ps - 1) + (hs - 1)
+        assert hp.weighted_span(q, pod_weight=2.5) == 2.5 * (ps - 1) + (hs - 1)
+        # a query served inside one pod costs no DCN hops
+        if ps == 1:
+            assert hp.weighted_span(q) == hs - 1
 
 
 def test_hierarchical_spans(queries):
