@@ -20,10 +20,11 @@ docs-check:
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
-# cheap perf signal: span engine + LMBR move engine + online serving
-# old-vs-new timings (BENCH_spans.json, BENCH_lmbr.json, BENCH_online.json)
+# cheap perf signal: span engine + LMBR move engine + online serving +
+# cluster-scale pipeline old-vs-new timings (BENCH_spans.json,
+# BENCH_lmbr.json, BENCH_online.json, BENCH_scale.json)
 bench-smoke:
-	$(PY) -m benchmarks.run --only bench_spans,bench_lmbr,bench_online
+	$(PY) -m benchmarks.run --only bench_spans,bench_lmbr,bench_online,bench_scale
 
 # full quick benchmark suite (all paper figures, single seed)
 bench:

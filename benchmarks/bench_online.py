@@ -192,12 +192,25 @@ def _drift_rows(quick: bool) -> list[dict]:
 
 # ---------------------------------------------------------------- failover
 def _kill_and_repair(hg, pl, kills, cap):
-    """Kill `kills`, repair, return (repaired avg_span, repaired count)."""
+    """Kill `kills`, repair, return (repaired avg_span, repaired count).
+
+    The wave-batched repair is asserted BIT-IDENTICAL to the retained
+    per-item reference (`FailoverManager.repair_reference`) on every kill
+    scenario — same copies, same destinations."""
     live = Placement(pl.member.copy(), cap, hg.node_weights)
     fo = FailoverManager(live)
+    ref_live = Placement(pl.member.copy(), cap, hg.node_weights)
+    fo_ref = FailoverManager(ref_live)
     for p in kills:
         fo.partition_down(p)
-    fo.repair(hg, k=1)
+        fo_ref.partition_down(p)
+    repaired = fo.repair(hg, k=1)
+    ref_repaired = fo_ref.repair_reference(hg, k=1)
+    if not (np.array_equal(repaired, ref_repaired)
+            and (live.member == ref_live.member).all()):
+        raise AssertionError(
+            f"batched repair diverged from the reference after {kills}"
+        )
     if len(fo.uncovered_items()):
         raise AssertionError(f"repair left items uncovered after {kills}")
     live.validate()  # repair must respect capacity

@@ -1,0 +1,237 @@
+"""Cluster-scale pipeline benchmark: streaming ingestion, sharded fits.
+
+Three sections, one BENCH_scale.json:
+
+  * stream — the 1M-query web-scale trace built two ways: the dict-era
+    constructor (`Hypergraph.from_edges`, one Python iteration + np.unique
+    per query) vs `StreamingHypergraphBuilder` ingesting the same raw CSR
+    chunks.  The CSRs are asserted BIT-IDENTICAL and the run aborts if the
+    streaming build is not >= 5x faster.  A `streaming-merged` row times the
+    duplicate-edge weight-merging mode (no gate; reported for the feature).
+  * fit — the web-scale tier (quick: 10k items / 50k queries / 32
+    partitions; full: the real `WEB_SCALE_DEFAULTS` 100k / 1M / 256):
+    monolithic LMBR runs under a wall-clock budget (blowing it marks the
+    row ``infeasible``, as bench_lmbr does, and its budget becomes the
+    LOWER bound of the sharded speedup); the sharded pipeline must complete
+    within its own budget (asserted).
+  * quality — a mid tier where BOTH fits are feasible (2.5k items / 10k
+    queries / 24 partitions): the sharded avg_span must land within 1.05x
+    of the monolithic fit (asserted), and the pooled run must be
+    bit-identical to the serial fallback (asserted).
+
+Emits benchmarks/results/BENCH_scale.json; see benchmarks/README.md for
+the row schema.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro import flags
+from repro.core import (
+    ALGORITHMS,
+    Hypergraph,
+    WEB_SCALE_DEFAULTS,
+    spans_for_workload,
+    web_scale_chunks,
+    web_scale_workload,
+)
+from repro.scale import StreamingHypergraphBuilder, fit_sharded_placement
+
+from .bench_lmbr import _run_with_budget
+from .common import emit_csv, save_json
+
+KEYS = [
+    "section", "tier", "engine", "queries", "items", "seconds", "speedup",
+    "infeasible", "identical", "avg_span", "ratio", "shards",
+    "boundary_edges", "boundary_cost", "workers",
+]
+
+STREAM_GATE = 5.0       # streaming build >= 5x the dict builder
+QUALITY_GATE = 1.05     # sharded avg_span <= 1.05x monolithic (mid tier)
+MONO_BUDGET_QUICK, MONO_BUDGET_FULL = 45.0, 600.0
+SHARDED_BUDGET_QUICK, SHARDED_BUDGET_FULL = 240.0, 1800.0
+
+
+# ------------------------------------------------------------------ stream
+def _stream_rows(quick: bool) -> list[dict]:
+    p = WEB_SCALE_DEFAULTS
+    nq, ni = p["num_queries"], p["num_items"]
+    tier = f"web-scale-{nq // 1000}k"
+    chunks = list(web_scale_chunks(seed=0))  # raw CSR chunks, pre-generated
+
+    builder = StreamingHypergraphBuilder(ni)
+    t0 = time.perf_counter()
+    for ptr, pins in chunks:
+        builder.add_csr(ptr, pins)
+    hg = builder.build()
+    t_stream = time.perf_counter() - t0
+
+    # the dict-era path consumes per-query sequences (slicing the chunks
+    # into views is untimed setup; from_edges pays its own unique per query)
+    queries: list[np.ndarray] = []
+    for ptr, pins in chunks:
+        queries.extend(pins[ptr[i]: ptr[i + 1]] for i in range(len(ptr) - 1))
+    t0 = time.perf_counter()
+    ref = Hypergraph.from_edges(queries, num_nodes=ni)
+    t_dict = time.perf_counter() - t0
+    del queries
+
+    if not hg.equals(ref):
+        raise AssertionError("streaming build diverged from from_edges")
+    speedup = t_dict / max(t_stream, 1e-9)
+    if speedup < STREAM_GATE:
+        raise AssertionError(
+            f"streaming build speedup {speedup:.1f}x < {STREAM_GATE}x gate "
+            f"(stream {t_stream:.2f}s vs dict {t_dict:.2f}s)"
+        )
+
+    merged = StreamingHypergraphBuilder(ni, merge_duplicates=True)
+    t0 = time.perf_counter()
+    for ptr, pins in chunks:
+        merged.add_csr(ptr, pins)
+    mhg = merged.build()
+    t_merge = time.perf_counter() - t0
+
+    base = dict(section="stream", tier=tier, queries=nq, items=ni)
+    return [
+        dict(base, engine="dict-builder", seconds=round(t_dict, 2),
+             speedup=1.0, identical=True),
+        dict(base, engine="streaming", seconds=round(t_stream, 2),
+             speedup=round(speedup, 1), identical=True),
+        dict(base, engine="streaming-merged", seconds=round(t_merge, 2),
+             speedup=round(t_dict / max(t_merge, 1e-9), 1), identical=False,
+             queries=int(mhg.num_edges)),
+    ]
+
+
+# --------------------------------------------------------------------- fit
+def _fit_rows(quick: bool) -> list[dict]:
+    if quick:
+        wl = web_scale_workload(num_items=10_000, num_queries=50_000,
+                                num_clusters=256, seed=0)
+        n, cap, shards, moves = 32, 650, 8, 100
+        mono_budget = MONO_BUDGET_QUICK
+        sharded_budget = SHARDED_BUDGET_QUICK
+        brepair = 64
+    else:
+        wl = web_scale_workload(seed=0)
+        n = WEB_SCALE_DEFAULTS["num_partitions"]
+        cap = WEB_SCALE_DEFAULTS["capacity"]
+        shards, moves, brepair = 32, 100, 128
+        mono_budget = MONO_BUDGET_FULL
+        sharded_budget = SHARDED_BUDGET_FULL
+    hg = wl.hypergraph
+    tier = wl.name
+
+    workers = max(2, min(8, os.cpu_count() or 1))  # fit the machine; the
+    # placement is worker-count independent (asserted in the quality rows)
+    t0 = time.perf_counter()
+    sharded = fit_sharded_placement(
+        hg, n, cap, num_shards=shards, workers=workers, seed=0,
+        max_moves=moves, boundary_repair=brepair,
+    )
+    t_sharded = time.perf_counter() - t0
+    if t_sharded > sharded_budget:
+        raise AssertionError(
+            f"sharded fit took {t_sharded:.0f}s > {sharded_budget:.0f}s "
+            f"budget on {tier}"
+        )
+    sharded_span = float(spans_for_workload(hg, sharded.placement).mean())
+
+    t0 = time.perf_counter()
+    mono, mono_out = _run_with_budget(
+        lambda: ALGORITHMS["lmbr"](hg, n, cap, seed=0, max_moves=4 * moves),
+        mono_budget,
+    )
+    t_mono = time.perf_counter() - t0
+    mono_span = (
+        round(float(spans_for_workload(hg, mono).mean()), 4)
+        if mono is not None else None
+    )
+
+    base = dict(section="fit", tier=tier, queries=hg.num_edges,
+                items=hg.num_nodes)
+    return [
+        dict(base, engine="monolithic", seconds=round(t_mono, 2),
+             speedup=1.0, infeasible=bool(mono_out), avg_span=mono_span),
+        dict(base, engine="sharded", seconds=round(t_sharded, 2),
+             # with an infeasible monolithic row this is a LOWER bound
+             speedup=round(t_mono / max(t_sharded, 1e-9), 1),
+             infeasible=False, avg_span=round(sharded_span, 4),
+             shards=sharded.stats["shards"],
+             boundary_edges=sharded.stats["boundary_edges"],
+             boundary_cost=sharded.stats["boundary_cost"],
+             workers=sharded.stats["workers"]),
+    ]
+
+
+# ----------------------------------------------------------------- quality
+def _quality_rows(quick: bool) -> list[dict]:
+    wl = web_scale_workload(num_items=2500, num_queries=10_000,
+                            num_clusters=48, cross_frac=0.05, seed=0)
+    hg = wl.hypergraph
+    n, cap = 24, 210
+    tier = "web-mid"
+
+    t0 = time.perf_counter()
+    mono = ALGORITHMS["lmbr"](hg, n, cap, seed=0, max_moves=400)
+    t_mono = time.perf_counter() - t0
+    mono_span = float(spans_for_workload(hg, mono).mean())
+
+    t0 = time.perf_counter()
+    serial = fit_sharded_placement(hg, n, cap, num_shards=4, workers=1,
+                                   seed=0, max_moves=150, boundary_repair=128)
+    t_serial = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pooled = fit_sharded_placement(hg, n, cap, num_shards=4, workers=2,
+                                   seed=0, max_moves=150, boundary_repair=128)
+    t_pooled = time.perf_counter() - t0
+    if not (serial.member == pooled.member).all():
+        raise AssertionError("pooled sharded fit diverged from serial")
+    sharded_span = float(spans_for_workload(hg, serial.placement).mean())
+    ratio = sharded_span / mono_span
+    if ratio > QUALITY_GATE:
+        raise AssertionError(
+            f"sharded avg_span {sharded_span:.4f} is {ratio:.3f}x the "
+            f"monolithic fit ({mono_span:.4f}) > {QUALITY_GATE} gate"
+        )
+
+    base = dict(section="quality", tier=tier, queries=hg.num_edges,
+                items=hg.num_nodes)
+    return [
+        dict(base, engine="monolithic", seconds=round(t_mono, 2),
+             avg_span=round(mono_span, 4), ratio=1.0),
+        dict(base, engine="sharded-serial", seconds=round(t_serial, 2),
+             avg_span=round(sharded_span, 4), ratio=round(ratio, 4),
+             identical=True, shards=serial.stats["shards"],
+             boundary_edges=serial.stats["boundary_edges"],
+             boundary_cost=serial.stats["boundary_cost"], workers=1),
+        dict(base, engine="sharded-pool", seconds=round(t_pooled, 2),
+             avg_span=round(sharded_span, 4), ratio=round(ratio, 4),
+             identical=True, shards=pooled.stats["shards"],
+             workers=2),
+    ]
+
+
+def run(quick: bool = True) -> list[dict]:
+    from repro.core.setcover import _accel_backend
+
+    _accel_backend()  # pay the one-time jax import outside the timings
+    flags.reset()
+    rows = []
+    rows += _stream_rows(quick)
+    rows += _fit_rows(quick)
+    rows += _quality_rows(quick)
+    for r in rows:
+        print(f"  {r}", flush=True)
+    emit_csv("bench_scale", rows, KEYS)
+    save_json("BENCH_scale", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -23,6 +23,7 @@ SECTIONS = [
     ("bench_spans", "span engine: reference loop vs batched bitset (+jax)"),
     ("bench_lmbr", "LMBR move engine: reference peel vs vectorized + cache"),
     ("bench_online", "online serving: router qps, drift recovery, failover"),
+    ("bench_scale", "cluster-scale: streaming ingestion, sharded parallel fits"),
     ("placement_applications", "framework: MoE experts / shards / checkpoints"),
     ("kernel_bench", "Pallas kernels vs jnp oracles (CPU interpret)"),
     ("roofline_table", "roofline terms from dry-run artifacts"),

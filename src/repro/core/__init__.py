@@ -16,7 +16,11 @@ Layout:
   shard_placement   — dataset shard->host placement for the input pipeline
 """
 
-from .hypergraph import Hypergraph, MutableHypergraph  # noqa: F401
+from .hypergraph import (  # noqa: F401
+    Hypergraph,
+    MutableHypergraph,
+    canonicalize_csr,
+)
 from .setcover import (  # noqa: F401
     Placement,
     SpanMaintainer,
@@ -51,12 +55,15 @@ from .simulator import EnergyModel, SimulationResult, Simulator  # noqa: F401
 from .workloads import (  # noqa: F401
     LMBR_STRESS_DEFAULTS,
     PAPER_DEFAULTS,
+    WEB_SCALE_DEFAULTS,
     Workload,
     ispd_like_workload,
     lmbr_stress_workload,
     random_workload,
     snowflake_workload,
     tpch_heterogeneous,
+    web_scale_chunks,
+    web_scale_workload,
 )
 from .placement_service import (  # noqa: F401
     HierarchicalPlan,

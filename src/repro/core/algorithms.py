@@ -857,12 +857,21 @@ def lmbr(
     nruns: int = 2,
     max_moves: int | None = None,
     initial: Placement | None = None,
+    dest_mask: np.ndarray | None = None,
     **_,
 ) -> Placement:
     """Improved LMBR (Algorithm 4 + Algorithm 5).
 
     `initial` warm-starts from an existing placement (incremental refits and
     the paper's use of LMBR as a capacity-fixup subroutine).
+
+    `dest_mask` (optional, (n,) bool) restricts which partitions may RECEIVE
+    copies: pairs with a masked destination are never evaluated or pushed.
+    Sources are unrestricted — a masked partition that serves no covers
+    (e.g. a failed partition whose membership row is zeroed) simply yields
+    no gain.  An all-True mask is bit-identical to no mask; this is how
+    online drift refits keep adapting during an outage (down rows masked)
+    without ever copying data onto dead partitions.
 
     Determinism contract: moves are applied in descending-gain order from a
     heap whose entries tie-break on (src, dest, version); candidate subsets
@@ -889,6 +898,12 @@ def lmbr(
     state = _LMBRState(hg, pl)
     if max_moves is None:
         max_moves = 50 * n
+    if dest_mask is None:
+        dest_ok = np.ones(n, dtype=bool)
+    else:
+        dest_ok = np.asarray(dest_mask, dtype=bool)
+        if dest_ok.shape != (n,):
+            raise ValueError(f"dest_mask must be ({n},) bool")
 
     # priority queue of (-gain, src, dest, version)
     version = np.zeros((n, n), dtype=np.int64)
@@ -905,7 +920,8 @@ def lmbr(
             if gain > 0 and items is not None:
                 heapq.heappush(pq, (-gain, s, d, int(version[s, d])))
 
-    push_many([(s, d) for s in range(n) for d in range(n) if s != d])
+    push_many([(s, d) for s in range(n) for d in range(n)
+               if s != d and dest_ok[d]])
 
     moves = 0
     while pq and moves < max_moves:
@@ -938,7 +954,8 @@ def lmbr(
         for g in range(n):
             if g != dest:
                 pairs.append((g, dest))
-                pairs.append((dest, g))
+                if dest_ok[g]:
+                    pairs.append((dest, g))
         pairs.append((src, dest))
         push_many(pairs)
     pl.stats = dict(

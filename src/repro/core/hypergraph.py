@@ -13,7 +13,23 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
-__all__ = ["Hypergraph", "build_incidence"]
+__all__ = ["Hypergraph", "build_incidence", "canonicalize_csr", "csr_ranges"]
+
+
+def csr_ranges(ptr: np.ndarray, ids: np.ndarray):
+    """Flat-gather indices of the CSR rows `ids`: returns (out_ptr, idx)
+    where ``idx`` concatenates the ranges ``[ptr[i], ptr[i+1])`` for each
+    id in order and ``out_ptr`` is the CSR of the result.  Row order is
+    preserved; shared by `Hypergraph.pin_indices` and the streaming
+    builder."""
+    ids = np.asarray(ids, dtype=np.int64)
+    sizes = ptr[ids + 1] - ptr[ids]
+    out_ptr = np.zeros(len(ids) + 1, dtype=np.int64)
+    np.cumsum(sizes, out=out_ptr[1:])
+    total = int(out_ptr[-1])
+    base = np.repeat(ptr[ids], sizes)
+    off = np.arange(total, dtype=np.int64) - np.repeat(out_ptr[:-1], sizes)
+    return out_ptr, base + off
 
 
 def build_incidence(edge_ptr: np.ndarray, edge_nodes: np.ndarray, num_nodes: int):
@@ -28,6 +44,32 @@ def build_incidence(edge_ptr: np.ndarray, edge_nodes: np.ndarray, num_nodes: int
     counts = np.bincount(sorted_nodes, minlength=num_nodes)
     node_ptr[1:] = np.cumsum(counts)
     return node_ptr, node_edges
+
+
+def canonicalize_csr(edge_ptr: np.ndarray, edge_nodes: np.ndarray):
+    """Sort and deduplicate the pins of every CSR edge in one vectorized
+    pass.  Returns a new (edge_ptr, edge_nodes) pair whose per-edge pin
+    arrays are exactly ``np.unique(edge)`` — the canonical form
+    `Hypergraph.from_edges` produces — without a per-edge Python loop, so a
+    million-query chunk canonicalizes in one lexsort instead of a million
+    `np.unique` calls (the streaming builder's hot path)."""
+    edge_ptr = np.asarray(edge_ptr, dtype=np.int64)
+    edge_nodes = np.asarray(edge_nodes, dtype=np.int64)
+    E = len(edge_ptr) - 1
+    sizes = np.diff(edge_ptr)
+    if len(edge_nodes) == 0:
+        return edge_ptr.copy(), edge_nodes.copy()
+    eid = np.repeat(np.arange(E, dtype=np.int64), sizes)
+    order = np.lexsort((edge_nodes, eid))
+    nodes = edge_nodes[order]
+    eids = eid[order]
+    keep = np.ones(len(nodes), dtype=bool)
+    keep[1:] = (nodes[1:] != nodes[:-1]) | (eids[1:] != eids[:-1])
+    new_nodes = nodes[keep]
+    counts = np.bincount(eids[keep], minlength=E)
+    new_ptr = np.zeros(E + 1, dtype=np.int64)
+    np.cumsum(counts, out=new_ptr[1:])
+    return new_ptr, new_nodes
 
 
 @dataclasses.dataclass
@@ -141,14 +183,7 @@ class Hypergraph:
         into the global pin arrays (``edge_nodes`` and anything aligned with
         it, e.g. a per-pin replica-selection array).  Pin order within each
         edge is preserved; edges appear in ``edge_ids`` order."""
-        edge_ids = np.asarray(edge_ids, dtype=np.int64)
-        sizes = self.edge_ptr[edge_ids + 1] - self.edge_ptr[edge_ids]
-        ptr = np.zeros(len(edge_ids) + 1, dtype=np.int64)
-        np.cumsum(sizes, out=ptr[1:])
-        total = int(ptr[-1])
-        base = np.repeat(self.edge_ptr[edge_ids], sizes)
-        off = np.arange(total, dtype=np.int64) - np.repeat(ptr[:-1], sizes)
-        return ptr, base + off
+        return csr_ranges(self.edge_ptr, edge_ids)
 
     def edges_csr(self, edge_ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """CSR (ptr, nodes) of the given hyperedges, vectorized gather."""
@@ -228,6 +263,16 @@ class Hypergraph:
         return alive_nodes, alive_edges, deg, total_w
 
     # ----------------------------------------------------------------- misc
+    def equals(self, other: "Hypergraph") -> bool:
+        """Exact structural equality: same CSR arrays, same weights (the
+        contract the streaming builder is tested against)."""
+        return (
+            np.array_equal(self.edge_ptr, other.edge_ptr)
+            and np.array_equal(self.edge_nodes, other.edge_nodes)
+            and np.array_equal(self.node_weights, other.node_weights)
+            and np.array_equal(self.edge_weights, other.edge_weights)
+        )
+
     def copy_mutable(self) -> "MutableHypergraph":
         return MutableHypergraph(
             [list(self.edge(e)) for e in range(self.num_edges)],

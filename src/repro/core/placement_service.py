@@ -7,13 +7,19 @@ by the framework's data pipeline, MoE runtime and checkpoint manager:
     `partitions_of(item)`, `select(query)` (greedy-set-cover replica
     selection), span statistics.
   * PlacementService.fit        — one-level placement (paper §4).
+  * PlacementService.fit_sharded — cluster-scale placement through the
+    `repro.scale` pipeline: workload sharding (connected components + HPA
+    coarse cut), parallel per-shard fits (process pool with a bit-identical
+    serial fallback), deterministic merge, bounded boundary-edge repair.
   * PlacementService.fit_hierarchical — two-level pod/host placement for TPU
     fleets (ICI inside a pod ≫ DCN across pods); span is minimized at the pod
     level first, then per pod at the host level.  Faithful generalization —
     the paper notes partitions may be "racks or even datacenters".
   * PlacementService.refit      — incremental re-placement when the workload
     drifts: LMBR warm-started from the current plan (new replicas only move
-    into free space; no full repartition, cheap to apply online).
+    into free space; no full repartition, cheap to apply online).  A
+    ``dest_mask`` confines new copies to surviving partitions, so drift
+    adaptation keeps running through an outage.
 """
 
 from __future__ import annotations
@@ -43,6 +49,9 @@ class PlacementPlan:
     capacity: float
     node_weights: np.ndarray
     algorithm: str
+    # optional fitter diagnostics (e.g. the sharded pipeline's stage stats);
+    # never serialized, never placement-semantic
+    stats: dict | None = None
 
     # --------------------------------------------------------------- queries
     def partitions_of(self, item: int) -> np.ndarray:
@@ -169,6 +178,55 @@ class PlacementService:
         pl.validate()
         return PlacementPlan(pl.member, capacity, hg.node_weights, self.algorithm)
 
+    # -------------------------------------------------------------- sharded
+    def fit_sharded(
+        self,
+        workload,
+        num_partitions: int,
+        capacity: float,
+        num_items: int | None = None,
+        node_weights: np.ndarray | None = None,
+        query_weights: np.ndarray | None = None,
+        num_shards: int | None = None,
+        workers: int | None = None,
+        boundary_repair: int | None = None,
+        **algo_kwargs,
+    ) -> PlacementPlan:
+        """Cluster-scale fit through the `repro.scale` pipeline.
+
+        ``workload`` is either a built `Hypergraph` (the streaming-ingestion
+        path — e.g. `StreamingHypergraphBuilder.build()`) or a query list as
+        `fit` takes.  ``num_shards`` / ``workers`` / ``boundary_repair``
+        default to ``flags.FLAGS["scale_shards" / "scale_workers" /
+        "scale_boundary_repair"]``.  The result is deterministic for fixed
+        inputs and seed regardless of worker count (serial and pooled
+        execution are bit-identical), and the returned plan carries the
+        pipeline diagnostics in ``.stats`` (shards, boundary_edges,
+        boundary_cost, per-stage seconds, ...)."""
+        from ..scale import fit_sharded_placement
+
+        if isinstance(workload, Hypergraph):
+            hg = workload
+            if node_weights is not None or query_weights is not None:
+                raise ValueError(
+                    "pass weights inside the Hypergraph, not alongside it"
+                )
+        else:
+            hg = Hypergraph.from_edges(
+                workload, num_nodes=num_items,
+                node_weights=node_weights, edge_weights=query_weights,
+            )
+        res = fit_sharded_placement(
+            hg, num_partitions, capacity, algorithm=self.algorithm,
+            seed=self.seed, nruns=self.nruns, num_shards=num_shards,
+            workers=workers, boundary_repair=boundary_repair, **algo_kwargs,
+        )
+        res.placement.validate()
+        return PlacementPlan(
+            res.placement.member, float(capacity), hg.node_weights,
+            f"{self.algorithm}+sharded", stats=res.stats,
+        )
+
     # -------------------------------------------------------------- 2-level
     def fit_hierarchical(
         self,
@@ -225,10 +283,14 @@ class PlacementService:
         plan: PlacementPlan,
         queries: Sequence[Sequence[int]],
         max_moves: int = 64,
+        dest_mask: np.ndarray | None = None,
     ) -> PlacementPlan:
         """Incremental adaptation to workload drift: LMBR warm-started from
         the current placement; only copies items into free space (existing
-        replicas never move, so the delta is cheap to apply online)."""
+        replicas never move, so the delta is cheap to apply online).
+        ``dest_mask`` ((N,) bool) excludes partitions from receiving copies
+        — the outage path: refitting on a failure-masked layout must never
+        target a down partition."""
         hg = Hypergraph.from_edges(
             queries, num_nodes=plan.member.shape[1],
             node_weights=plan.node_weights,
@@ -236,6 +298,7 @@ class PlacementService:
         pl = lmbr(
             hg, plan.num_partitions, plan.capacity,
             seed=self.seed, initial=plan.as_placement(), max_moves=max_moves,
+            dest_mask=dest_mask,
         )
         pl.validate()
         return PlacementPlan(

@@ -220,8 +220,10 @@ class Simulator:
         after each microbatch the windowed avg span is compared against the
         fit-time baseline and a regression past
         ``flags.FLAGS["drift_threshold"]`` triggers an incremental refit on
-        the sketch window, hot-swapped into the router between microbatches
-        (deferred while any partition is down).  The returned result's
+        the sketch window, hot-swapped into the router between microbatches.
+        During an outage the refit runs on the failure-masked surviving
+        layout (down rows excluded from receiving copies), so adaptation
+        continues while partitions are dead.  The returned result's
         ``spans`` cover the served queries only, and ``summary()`` carries
         the serving counters (served_queries, plan_swaps, repaired_items,
         degraded_queries, ...)."""
@@ -321,12 +323,26 @@ class Simulator:
                     [nodes[ptr[i]: ptr[i + 1]] for i in range(len(ptr) - 1)],
                     batch.spans,
                 )
-                # hot-swap between microbatches; deferred during an outage
-                if not failover.down_partitions and detector.should_refit():
-                    new_plan = detector.refit()
-                    router.swap_plan(new_plan.member)
-                    live = new_plan.as_placement()
-                    failover.rebase(live)
+                # hot-swap between microbatches.  During an outage the refit
+                # runs on the failure-masked layout with the down rows
+                # excluded from receiving copies (dest_mask), so drift
+                # adaptation continues through arbitrarily long outages —
+                # skipped only while coverage is still broken (a refit
+                # cannot warm-start from a layout with unplaced items).
+                if detector.should_refit():
+                    down = failover.down_partitions
+                    if not down:
+                        new_plan = detector.refit()
+                    elif len(failover.uncovered_items()) == 0:
+                        survivors = np.ones(self.n, dtype=bool)
+                        survivors[down] = False
+                        new_plan = detector.refit(dest_mask=survivors)
+                    else:
+                        new_plan = None
+                    if new_plan is not None:
+                        router.swap_plan(new_plan.member)
+                        live = new_plan.as_placement()
+                        failover.rebase(live)
             pos = stop
         while ev_i < len(ev):  # events scheduled at/after the trace end
             _apply(ev[ev_i][1], ev[ev_i][2])

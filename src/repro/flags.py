@@ -75,6 +75,30 @@ FLAGS = {
     # drift detector: refit trigger — fires when the windowed avg_span
     # exceeds (fit-time baseline) * drift_threshold.
     "drift_threshold": 1.25,
+    # online router (balanced mode): stale-ledger tolerance for the
+    # tie-break row permutation.  The lexsort over (load, id) is only
+    # rebuilt when some partition's ledger load has shifted by more than
+    # epsilon * max(load at last sort, 1.0) since the last sort.  0.0 (the
+    # default) rebuilds on ANY shift — bit-identical to re-sorting every
+    # microbatch (an unchanged ledger lexsorts to the same permutation);
+    # > 0 keeps the lexsort off the steady-state hot path at the cost of
+    # routing against a slightly stale load ordering (spans are unaffected
+    # — only which equal-gain replica serves).
+    "router_ledger_epsilon": 0.0,
+    # cluster-scale sharded fit (repro.scale): number of workload shards.
+    # 0 = auto (max(1, num_partitions // 8)); explicit values pin the
+    # decomposition width.
+    "scale_shards": 0,
+    # cluster-scale sharded fit: per-shard fit processes.  1 (default) runs
+    # the deterministic serial path; > 1 dispatches shards onto a process
+    # pool (results are merged in shard order, so worker count never
+    # changes the fitted placement — asserted by tests/test_scale.py).
+    "scale_workers": 1,
+    # cluster-scale sharded fit: LMBR move budget for the bounded repair
+    # pass restricted to cross-shard boundary edges after the merge
+    # (0 disables the pass; repair only ever copies into free space, so it
+    # is capacity-safe by construction).
+    "scale_boundary_repair": 256,
 }
 
 
@@ -106,10 +130,32 @@ def set_variant(spec: str):
             FLAGS["lmbr_peel"] = backend
         elif part.startswith("lmbrcache"):
             FLAGS["lmbr_gain_cache"] = bool(int(part[len("lmbrcache"):]))
+        elif part.startswith("routereps"):
+            eps = float(part[len("routereps"):])
+            if eps < 0:
+                raise ValueError(f"router_ledger_epsilon must be >= 0, got {eps}")
+            FLAGS["router_ledger_epsilon"] = eps
         elif part.startswith("routerbal"):
             FLAGS["router_balance"] = bool(int(part[len("routerbal"):]))
         elif part.startswith("routermb"):
             FLAGS["router_microbatch"] = int(part[len("routermb"):])
+        elif part.startswith("shards"):
+            shards = int(part[len("shards"):])
+            if shards < 0:
+                raise ValueError(f"scale_shards must be >= 0, got {shards}")
+            FLAGS["scale_shards"] = shards
+        elif part.startswith("scalew"):
+            workers = int(part[len("scalew"):])
+            if workers < 1:
+                raise ValueError(f"scale_workers must be >= 1, got {workers}")
+            FLAGS["scale_workers"] = workers
+        elif part.startswith("brepair"):
+            moves = int(part[len("brepair"):])
+            if moves < 0:
+                raise ValueError(
+                    f"scale_boundary_repair must be >= 0, got {moves}"
+                )
+            FLAGS["scale_boundary_repair"] = moves
         elif part.startswith("driftw"):
             FLAGS["drift_window"] = int(part[len("driftw"):])
         elif part.startswith("driftth"):
@@ -129,4 +175,6 @@ def reset():
                  span_dispatch_threshold=48_000, lmbr_peel="vector",
                  lmbr_gain_cache=True, lmbr_peel_threshold=256,
                  router_microbatch=384, router_balance=False,
-                 drift_window=512, drift_threshold=1.25)
+                 drift_window=512, drift_threshold=1.25,
+                 router_ledger_epsilon=0.0, scale_shards=0, scale_workers=1,
+                 scale_boundary_repair=256)

@@ -159,13 +159,20 @@ class DriftDetector:
             self.stats["drift_fires"] += 1
         return fired
 
-    def refit(self) -> PlacementPlan:
+    def refit(self, dest_mask: np.ndarray | None = None) -> PlacementPlan:
         """Incremental refit on the sketch window; adopts and returns the
         new plan, with spans re-baselined against it.  The span window is
-        cleared so the trigger re-arms on post-swap traffic only."""
+        cleared so the trigger re-arms on post-swap traffic only.
+
+        ``dest_mask`` ((N,) bool) is the outage path: when the live layout
+        has partitions down, the caller passes the surviving rows so the
+        refit keeps adapting WITHOUT copying anything onto dead partitions
+        (the down rows of ``self.plan.member`` are already masked, since the
+        plan shares the live membership matrix)."""
         window = self.sketch.window_queries()
         new_plan = self.service.refit(
-            self.plan, window, max_moves=self.refit_moves
+            self.plan, window, max_moves=self.refit_moves,
+            dest_mask=dest_mask,
         )
         self.plan = new_plan
         self.stats["refits"] += 1

@@ -24,6 +24,16 @@ next router microbatch):
   item from that partition — so repair copies land where they keep spans
   low.  Ties -> most free space, then lowest partition id; capacity is never
   exceeded (items that fit nowhere stay lost and are reported).
+
+  Since PR 5 the benefit vectors come from ONE batched engine call per
+  repair *wave* (`_batched_benefits`: a single gather over every pending
+  item's incident-edge pins + one `logical_or.reduceat` + one sequential
+  scatter-add) instead of a per-item Python loop over edges.  Placement
+  stays strictly sequential in the same hottest-first order, and a wave
+  ends exactly when a just-placed copy could invalidate the next item's
+  precomputed benefit (they share an edge) — so the batched path is
+  BIT-IDENTICAL to the retained per-item reference (`repair_reference`),
+  asserted on the bench_online kill scenarios and in tests/test_online.py.
 * `partition_up(p)` restores the saved row (the replicas come back; repair
   copies made meanwhile simply remain as extra replicas).
 """
@@ -57,10 +67,19 @@ class FailoverManager:
         return sorted(self._saved)
 
     def rebase(self, placement: Placement) -> None:
-        """Adopt a hot-swapped live placement (drift refit).  Only legal with
-        no partition down — refits are deferred during an outage."""
-        if self._saved:
-            raise RuntimeError("cannot rebase while partitions are down")
+        """Adopt a hot-swapped live placement (drift refit).
+
+        Legal during an outage only when the new layout keeps every down
+        partition's membership row EMPTY (the outage-refit contract: the
+        fit ran on the failure-masked matrix with down rows excluded from
+        receiving copies), so the saved pre-failure rows stay restorable by
+        `partition_up` and the load ledger stays consistent."""
+        for p in self._saved:
+            if placement.member[p].any():
+                raise RuntimeError(
+                    f"cannot rebase: new placement stores items on down "
+                    f"partition {p}"
+                )
         self.pl = placement
         self._loads = placement.partition_weights()
 
@@ -121,6 +140,113 @@ class FailoverManager:
     def replica_counts(self) -> np.ndarray:
         return self.pl.member.sum(axis=0)
 
+    def _repair_order(self, hg: Hypergraph, k: int,
+                      items: np.ndarray | None) -> np.ndarray:
+        """Under-replicated items in repair order: hottest first (descending
+        weighted degree, stable -> lowest item id on ties)."""
+        if items is None:
+            need = np.flatnonzero(
+                (self.replica_counts() < k) & (self.pl.node_weights > 0)
+            )
+        else:
+            need = np.asarray(items, dtype=np.int64)
+        if not len(need):
+            return need
+        deg = hg.degrees()
+        return need[np.argsort(-deg[need], kind="stable")]
+
+    def _place_copies(self, hg: Hypergraph, v: int, k: int,
+                      live_rows: np.ndarray, benefit: np.ndarray,
+                      repaired: list[int]) -> bool:
+        """Bring item v up to k live copies using a precomputed benefit
+        vector (valid while no edge of v gains a new co-located pin).
+        Returns True iff at least one copy was placed."""
+        pl = self.pl
+        placed = False
+        while int(pl.member[live_rows, v].sum()) < k:
+            wv = float(pl.node_weights[v])
+            fits = (
+                live_rows
+                & (self._loads + wv <= pl.capacity + 1e-9)
+                & ~pl.member[:, v]
+            )
+            if not fits.any():
+                self.stats["unrepairable_items"] += 1
+                break
+            # max benefit; ties -> most free space, then lowest id
+            cand = np.flatnonzero(fits)
+            key = np.lexsort((
+                cand,                       # lowest id last resort
+                self._loads[cand],          # least loaded
+                -benefit[cand],             # max co-location benefit
+            ))
+            d = int(cand[key[0]])
+            pl.member[d, v] = True
+            self._loads[d] += wv
+            repaired.append(int(v))
+            placed = True
+        return placed
+
+    def _benefit_reference(self, hg: Hypergraph, v: int) -> np.ndarray:
+        """Per-item co-location benefit, the retained per-edge oracle."""
+        node_ptr, node_edges = hg.incidence()
+        ev = node_edges[node_ptr[v]: node_ptr[v + 1]]
+        benefit = np.zeros(self.pl.num_partitions, dtype=np.float64)
+        for e in ev:
+            pins = hg.edge(int(e))
+            pins = pins[pins != v]
+            if len(pins):
+                benefit += float(hg.edge_weights[e]) * (
+                    self.pl.member[:, pins].any(axis=1)
+                )
+        return benefit
+
+    def _batched_benefits(self, hg: Hypergraph, items: np.ndarray) -> np.ndarray:
+        """(len(items), N) co-location benefit matrix against the CURRENT
+        layout, one vectorized engine pass for the whole repair wave.
+
+        Exactness: row i accumulates `w_e * (partition holds another pin of
+        e)` over item i's incident edges in incidence order — `np.add.at`
+        is sequential over its index arrays, so each row's float-sum order
+        matches `_benefit_reference`'s per-edge loop bit-for-bit."""
+        pl = self.pl
+        N = pl.num_partitions
+        node_ptr, node_edges = hg.incidence()
+        cnt = node_ptr[items + 1] - node_ptr[items]
+        total = int(cnt.sum())
+        out = np.zeros((len(items), N), dtype=np.float64)
+        if not total:
+            return out
+        base = np.repeat(node_ptr[items], cnt)
+        off = np.arange(total, dtype=np.int64) - np.repeat(
+            np.concatenate([[0], np.cumsum(cnt[:-1])]), cnt
+        )
+        pair_edge = node_edges[base + off]          # (F,) incident edges
+        pair_row = np.repeat(
+            np.arange(len(items), dtype=np.int64), cnt
+        )
+        pair_item = np.repeat(items, cnt)
+        ptr, pidx = hg.pin_indices(pair_edge)
+        pins = hg.edge_nodes[pidx]
+        ppair = np.repeat(
+            np.arange(len(pair_edge), dtype=np.int64), np.diff(ptr)
+        )
+        kept = np.flatnonzero(pins != pair_item[ppair])  # "other" pins only
+        held = np.zeros((len(pair_edge), N), dtype=bool)
+        if len(kept):
+            kp = ppair[kept]
+            starts = np.flatnonzero(
+                np.concatenate([[True], kp[1:] != kp[:-1]])
+            )
+            red = np.logical_or.reduceat(
+                pl.member[:, pins[kept]], starts, axis=1
+            )  # (N, groups)
+            held[kp[starts]] = red.T
+        np.add.at(
+            out, pair_row, hg.edge_weights[pair_edge][:, None] * held
+        )
+        return out
+
     def repair(self, hg: Hypergraph, k: int = 1,
                items: np.ndarray | None = None) -> np.ndarray:
         """Re-replicate under-replicated items into surviving free space.
@@ -132,53 +258,59 @@ class FailoverManager:
         attract their co-accessed peers.  Returns the unique repaired item
         ids; ``stats["repaired_items"]`` counts replica COPIES placed (== the
         returned length for k=1, larger when one item needs several copies).
+
+        Benefits are computed one batched call per WAVE; a wave restarts at
+        the first item whose benefit could be stale (it shares an edge with
+        an item that just received a copy), so the placements — order,
+        destinations, float ties — are bit-identical to `repair_reference`.
         """
         pl = self.pl
         live_rows = np.ones(pl.num_partitions, dtype=bool)
         live_rows[self.down_partitions] = False
-        if items is None:
-            need = np.flatnonzero(
-                (self.replica_counts() < k) & (pl.node_weights > 0)
-            )
-        else:
-            need = np.asarray(items, dtype=np.int64)
-        if not len(need):
-            return need
-        deg = hg.degrees()
-        order = need[np.argsort(-deg[need], kind="stable")]
+        order = self._repair_order(hg, k, items)
+        if not len(order):
+            return order
         node_ptr, node_edges = hg.incidence()
+        repaired: list[int] = []
+        pos = 0
+        while pos < len(order):
+            # capped wave: on clustered workloads consecutive hot items
+            # often share edges, so a wave can end after one placement —
+            # the cap bounds the recompute waste to a constant factor
+            # instead of going quadratic over the remaining tail
+            wave = order[pos: pos + 64]
+            benefits = self._batched_benefits(hg, wave)
+            touched = np.zeros(hg.num_edges, dtype=bool)
+            i = 0
+            while i < len(wave):
+                v = int(wave[i])
+                ev = node_edges[node_ptr[v]: node_ptr[v + 1]]
+                if i > 0 and len(ev) and touched[ev].any():
+                    break  # precomputed benefit may be stale: new wave
+                if self._place_copies(hg, v, k, live_rows, benefits[i],
+                                      repaired):
+                    touched[ev] = True
+                i += 1
+            pos += max(i, 1)
+        self.stats["repaired_items"] += len(repaired)
+        return np.asarray(sorted(set(repaired)), dtype=np.int64)
+
+    def repair_reference(self, hg: Hypergraph, k: int = 1,
+                         items: np.ndarray | None = None) -> np.ndarray:
+        """The retained per-item oracle `repair` is asserted against:
+        identical greedy order and tie-breaks, one per-edge Python benefit
+        loop per copy instead of one batched call per wave."""
+        pl = self.pl
+        live_rows = np.ones(pl.num_partitions, dtype=bool)
+        live_rows[self.down_partitions] = False
+        order = self._repair_order(hg, k, items)
+        if not len(order):
+            return order
         repaired: list[int] = []
         for v in order:
             v = int(v)
-            while int(pl.member[live_rows, v].sum()) < k:
-                wv = float(pl.node_weights[v])
-                fits = (
-                    live_rows
-                    & (self._loads + wv <= pl.capacity + 1e-9)
-                    & ~pl.member[:, v]
-                )
-                if not fits.any():
-                    self.stats["unrepairable_items"] += 1
-                    break
-                ev = node_edges[node_ptr[v]: node_ptr[v + 1]]
-                benefit = np.zeros(pl.num_partitions, dtype=np.float64)
-                for e in ev:
-                    pins = hg.edge(int(e))
-                    pins = pins[pins != v]
-                    if len(pins):
-                        benefit += float(hg.edge_weights[e]) * (
-                            pl.member[:, pins].any(axis=1)
-                        )
-                # max benefit; ties -> most free space, then lowest id
-                cand = np.flatnonzero(fits)
-                key = np.lexsort((
-                    cand,                       # lowest id last resort
-                    self._loads[cand],          # least loaded
-                    -benefit[cand],             # max co-location benefit
-                ))
-                d = int(cand[key[0]])
-                pl.member[d, v] = True
-                self._loads[d] += wv
-                repaired.append(v)
+            self._place_copies(
+                hg, v, k, live_rows, self._benefit_reference(hg, v), repaired
+            )
         self.stats["repaired_items"] += len(repaired)
         return np.asarray(sorted(set(repaired)), dtype=np.int64)

@@ -21,6 +21,16 @@ Tie-break modes
   The greedy gain sequence is unchanged (only which *equal-gain* replica
   serves), so spans are typically identical and load spreads across replicas.
 
+  The permutation is rebuilt lazily: ``flags.FLAGS["router_ledger_epsilon"]``
+  is the stale-ledger tolerance — the (load, id) lexsort only re-runs when
+  some partition's load has shifted by more than
+  ``epsilon * max(its load at the last sort, 1.0)`` since that sort.  At
+  epsilon=0 (the default) ANY shift re-sorts, which is bit-identical to
+  sorting every microbatch (an unshifted ledger lexsorts to the same
+  permutation — asserted by tests/test_online.py); larger epsilons keep the
+  O(N log N) sort off the steady-state hot path and only ever trade which
+  equal-gain replica serves.
+
 The ledger counts partition accesses (one per chosen cover member, the same
 unit as ``SimulationResult.access_load``) and is updated once per microbatch.
 """
@@ -103,7 +113,10 @@ class ReplicaRouter:
         self.load = np.zeros(self.member.shape[0], dtype=np.float64)
         self._microbatch = microbatch
         self._balance = balance
-        self.stats = dict(served_queries=0, microbatches=0, plan_swaps=0)
+        self._perm: np.ndarray | None = None       # cached tie-break rows
+        self._perm_load: np.ndarray | None = None  # ledger at last sort
+        self.stats = dict(served_queries=0, microbatches=0, plan_swaps=0,
+                          ledger_sorts=0)
 
     @staticmethod
     def _as_member(obj) -> np.ndarray:
@@ -174,13 +187,26 @@ class ReplicaRouter:
                                np.zeros(1, dtype=np.int64), z)
         return _concat_batches(out)
 
+    def _ledger_perm(self) -> np.ndarray:
+        """Rows ascending by (ledger load, id), rebuilt only when the ledger
+        has drifted past ``router_ledger_epsilon`` since the last sort."""
+        eps = float(_flags.FLAGS.get("router_ledger_epsilon", 0.0))
+        if self._perm is not None:
+            drift = np.abs(self.load - self._perm_load)
+            if not (drift > eps * np.maximum(self._perm_load, 1.0)).any():
+                return self._perm
+        self._perm = np.lexsort(
+            (np.arange(self.num_partitions), self.load)
+        ).astype(np.int64)
+        self._perm_load = self.load.copy()
+        self.stats["ledger_sorts"] += 1
+        return self._perm
+
     def _route_microbatch(self, ptr, nodes, balance: bool) -> RoutedBatch:
         if balance:
             # rows ascending by (ledger load, id): the engine's lowest-row-id
             # tie-break becomes "least-loaded maximal-gain partition"
-            order = np.lexsort(
-                (np.arange(self.num_partitions), self.load)
-            ).astype(np.int64)
+            order = self._ledger_perm()
             cov = batched_cover_csr(
                 ptr, nodes, self.member[order], with_pin_parts=True
             )

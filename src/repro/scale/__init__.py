@@ -1,0 +1,35 @@
+"""repro.scale — the cluster-scale placement pipeline.
+
+The paper fits one hypergraph in one pass; this package makes million-query
+traces a first-class scenario by decomposing the problem along the
+workload's own structure:
+
+  stream        — `StreamingHypergraphBuilder`: out-of-core chunked trace
+                  ingestion into growing CSR buffers (vectorized
+                  canonicalization, optional duplicate-edge weight
+                  merging); bit-identical to `Hypergraph.from_edges`
+  sharder       — `shard_workload`: connected components + HPA coarse cut
+                  of oversized components into near-independent
+                  sub-workloads, with explicit boundary-edge accounting
+                  (`boundary_cost` = sum w_e * (lambda_e - 1))
+  parallel_fit  — `fit_sharded_placement`: per-shard fits on a process
+                  pool (deterministic serial fallback, bit-identical),
+                  block-structured merge + capacity reconciliation, and a
+                  bounded LMBR repair pass restricted to cross-shard
+                  boundary edges
+
+`PlacementService.fit_sharded` (``repro.core.placement_service``) is the
+production entry point; `benchmarks/bench_scale.py` gates the pipeline.
+"""
+
+from .stream import StreamingHypergraphBuilder  # noqa: F401
+from .sharder import (  # noqa: F401
+    ShardSpec,
+    ShardingPlan,
+    connected_components,
+    shard_workload,
+)
+from .parallel_fit import (  # noqa: F401
+    ShardedFitResult,
+    fit_sharded_placement,
+)

@@ -1,0 +1,195 @@
+"""Parallel per-shard fits + deterministic merge + boundary repair.
+
+The third stage of the cluster-scale pipeline: every `ShardSpec` from
+`sharder.shard_workload` is an independent placement problem (its own
+sub-hypergraph, partition slice, capacity), so the fits dispatch onto a
+process pool (``flags.FLAGS["scale_workers"]``) — with a deterministic
+serial fallback that produces BIT-IDENTICAL results, because
+
+  * each shard's fit is a pure function of (algorithm, shard CSR, seed) —
+    the shard seed is ``seed + shard_index``, never pool-order dependent;
+  * results are merged in shard-index order regardless of completion order;
+  * the flags snapshot rides along in the worker payload, so child
+    processes compute under the caller's exact configuration.
+
+Merge: shard s's fit occupies global partition rows
+``part_offset[s]:part_offset[s+1]`` and its local item ids map back through
+``ShardSpec.items`` — the merged membership matrix is block-structured, one
+block per shard.  Capacity reconciliation then re-derives every row's load
+from the merged matrix and validates it against the global capacity (each
+shard fitted under the same per-partition capacity, so the merge cannot
+overflow; the check guards the invariant rather than trusting it).
+
+Boundary repair: the merged plan has never seen the cross-shard edges, so a
+bounded LMBR pass (``flags.FLAGS["scale_boundary_repair"]`` moves) runs on
+the hypergraph of exactly those edges, warm-started from the merged
+placement.  LMBR only ever COPIES items into free space under the capacity
+check, so the pass is capacity-safe by construction and strictly
+non-destructive — existing replicas never move, matching
+`PlacementService.refit`'s online-cheap contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .. import flags as _flags
+from ..core.algorithms import ALGORITHMS, lmbr
+from ..core.hypergraph import Hypergraph
+from ..core.setcover import Placement
+from .sharder import ShardingPlan, shard_workload
+
+__all__ = ["ShardedFitResult", "fit_sharded_placement"]
+
+
+def _fit_shard_worker(payload: tuple) -> tuple[np.ndarray, dict | None]:
+    """Top-level (picklable) per-shard fit: rebuild the shard hypergraph
+    from raw CSR arrays, restore the caller's flags, run the algorithm."""
+    (algo_name, flag_snapshot, edge_ptr, edge_nodes, node_w, edge_w,
+     n_parts, capacity, seed, nruns, algo_kwargs) = payload
+    _flags.FLAGS.update(flag_snapshot)
+    hg = Hypergraph(edge_ptr, edge_nodes, node_w, edge_w)
+    fn = ALGORITHMS[algo_name]
+    pl = fn(hg, n_parts, capacity, seed=seed, nruns=nruns, **algo_kwargs)
+    pl.validate()
+    return pl.member, pl.stats
+
+
+@dataclasses.dataclass
+class ShardedFitResult:
+    """A merged sharded fit plus the pipeline's diagnostics."""
+
+    placement: Placement
+    sharding: ShardingPlan
+    stats: dict
+
+    @property
+    def member(self) -> np.ndarray:
+        return self.placement.member
+
+
+def _shard_payloads(sharding: ShardingPlan, algorithm: str, seed: int,
+                    nruns: int, algo_kwargs: dict) -> list[tuple | None]:
+    snapshot = dict(_flags.FLAGS)
+    payloads: list[tuple | None] = []
+    for s, spec in enumerate(sharding.shards):
+        if len(spec.items) == 0:
+            payloads.append(None)  # empty shard: rows stay empty
+            continue
+        payloads.append((
+            algorithm, snapshot,
+            spec.sub_hg.edge_ptr, spec.sub_hg.edge_nodes,
+            spec.sub_hg.node_weights, spec.sub_hg.edge_weights,
+            spec.num_partitions, spec.capacity, seed + s, nruns,
+            algo_kwargs,
+        ))
+    return payloads
+
+
+def _run_fits(payloads, workers: int):
+    """(results aligned with payloads, used_pool) — pool when workers > 1
+    and a pool can be created, else the bit-identical serial path."""
+    live = [(i, p) for i, p in enumerate(payloads) if p is not None]
+    results: list = [None] * len(payloads)
+    if workers > 1 and len(live) > 1:
+        try:
+            from concurrent.futures import ProcessPoolExecutor
+
+            with ProcessPoolExecutor(max_workers=workers) as ex:
+                outs = list(ex.map(_fit_shard_worker, [p for _, p in live]))
+            for (i, _), out in zip(live, outs):
+                results[i] = out
+            return results, True
+        except (ImportError, OSError, PermissionError):
+            pass  # containers without /dev/shm etc.: fall through to serial
+    for i, p in live:
+        results[i] = _fit_shard_worker(p)
+    return results, False
+
+
+def fit_sharded_placement(
+    hg: Hypergraph,
+    num_partitions: int,
+    capacity: float,
+    algorithm: str = "lmbr",
+    seed: int = 0,
+    nruns: int = 2,
+    num_shards: int | None = None,
+    workers: int | None = None,
+    boundary_repair: int | None = None,
+    **algo_kwargs,
+) -> ShardedFitResult:
+    """The full pipeline: shard -> parallel per-shard fits -> merge ->
+    bounded boundary repair.  Deterministic for fixed (inputs, seed)
+    regardless of worker count."""
+    if algorithm not in ALGORITHMS:
+        raise KeyError(f"unknown algorithm {algorithm!r}")
+    if num_shards is None:
+        num_shards = int(_flags.FLAGS.get("scale_shards", 0))
+    if num_shards <= 0:
+        num_shards = max(1, num_partitions // 8)
+    if workers is None:
+        workers = int(_flags.FLAGS.get("scale_workers", 1))
+    if boundary_repair is None:
+        boundary_repair = int(_flags.FLAGS.get("scale_boundary_repair", 256))
+
+    t0 = time.perf_counter()
+    sharding = shard_workload(hg, num_partitions, capacity, num_shards,
+                              seed=seed)
+    t_shard = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    payloads = _shard_payloads(sharding, algorithm, seed, nruns, algo_kwargs)
+    results, used_pool = _run_fits(payloads, workers)
+    t_fit = time.perf_counter() - t0
+
+    # ------------------------------------------------------------- merge
+    t0 = time.perf_counter()
+    member = np.zeros((num_partitions, hg.num_nodes), dtype=bool)
+    shard_moves = 0
+    for s, out in enumerate(results):
+        if out is None:
+            continue
+        sub_member, sub_stats = out
+        lo = int(sharding.part_offset[s])
+        rows = np.arange(sub_member.shape[0]) + lo
+        member[np.ix_(rows, sharding.shards[s].items)] = sub_member
+        if sub_stats:
+            shard_moves += int(sub_stats.get("moves", 0))
+    merged = Placement(member, float(capacity), hg.node_weights)
+    # capacity reconciliation: re-derive loads from the merged matrix and
+    # enforce the global budget (raises on any overflowing row)
+    merged.validate()
+    t_merge = time.perf_counter() - t0
+
+    # -------------------------------------------------- boundary repair
+    t0 = time.perf_counter()
+    repair_moves = 0
+    if boundary_repair > 0 and len(sharding.boundary_edges):
+        bhg = hg.subhypergraph_edges(sharding.boundary_edges)
+        repaired = lmbr(
+            bhg, num_partitions, float(capacity), seed=seed,
+            initial=merged, max_moves=int(boundary_repair),
+        )
+        repaired.validate()
+        repair_moves = int((repaired.stats or {}).get("moves", 0))
+        merged = Placement(
+            repaired.member, float(capacity), hg.node_weights
+        )
+    t_repair = time.perf_counter() - t0
+
+    merged.stats = dict(
+        shards=sharding.num_shards,
+        components=sharding.num_components,
+        boundary_edges=int(len(sharding.boundary_edges)),
+        boundary_cost=round(float(sharding.boundary_cost), 3),
+        workers=int(workers), used_pool=bool(used_pool),
+        shard_moves=shard_moves, repair_moves=repair_moves,
+        shard_seconds=round(t_shard, 3), fit_seconds=round(t_fit, 3),
+        merge_seconds=round(t_merge, 3), repair_seconds=round(t_repair, 3),
+    )
+    return ShardedFitResult(placement=merged, sharding=sharding,
+                            stats=merged.stats)

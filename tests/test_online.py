@@ -219,13 +219,112 @@ def test_failover_repair_respects_tight_capacity():
     assert (live.partition_weights() <= live.capacity + 1e-9).all()
 
 
-def test_failover_rebase_blocked_during_outage(fitted):
+def test_failover_rebase_rules_during_outage(fitted):
+    """Rebasing during an outage is legal iff the new layout keeps every
+    down partition's row empty (the outage-refit contract); a layout that
+    stores items on a dead partition is rejected."""
     hg, pl = fitted
     live = Placement(pl.member.copy(), pl.capacity, hg.node_weights)
     fo = FailoverManager(live)
     fo.partition_down(1)
+    bad = Placement(np.ones_like(pl.member), pl.capacity * 100,
+                    hg.node_weights)
     with pytest.raises(RuntimeError):
-        fo.rebase(live)
+        fo.rebase(bad)
+    fo.rebase(live)  # masked layout: down row empty -> legal
+    assert fo.pl is live and fo.down_partitions == [1]
+    fo.partition_up(1)  # saved row still restorable after the rebase
+    assert live.member[1].any()
+
+
+def test_failover_repair_batched_matches_reference(fitted):
+    """The wave-batched repair is bit-identical to the retained per-item
+    reference on every single kill and a few pairs (the bench_online kill
+    scenarios in miniature): same copies, same destinations, same stats."""
+    hg, pl = fitted
+    for kills in [[p] for p in range(pl.num_partitions)] + [[0, 1], [3, 7]]:
+        batched = Placement(pl.member.copy(), pl.capacity, hg.node_weights)
+        ref = Placement(pl.member.copy(), pl.capacity, hg.node_weights)
+        fo_b, fo_r = FailoverManager(batched), FailoverManager(ref)
+        for p in kills:
+            fo_b.partition_down(p)
+            fo_r.partition_down(p)
+        got = fo_b.repair(hg, k=1)
+        want = fo_r.repair_reference(hg, k=1)
+        assert np.array_equal(got, want), f"repaired set diverged {kills}"
+        assert (batched.member == ref.member).all(), f"layout diverged {kills}"
+        assert fo_b.stats == fo_r.stats
+
+
+def test_failover_repair_batched_matches_reference_k2(fitted):
+    hg, pl = fitted
+    batched = Placement(pl.member.copy(), pl.capacity * 4, hg.node_weights)
+    ref = Placement(pl.member.copy(), pl.capacity * 4, hg.node_weights)
+    fo_b, fo_r = FailoverManager(batched), FailoverManager(ref)
+    fo_b.partition_down(0)
+    fo_r.partition_down(0)
+    got = fo_b.repair(hg, k=2)
+    want = fo_r.repair_reference(hg, k=2)
+    assert np.array_equal(got, want)
+    assert (batched.member == ref.member).all()
+
+
+# --------------------------------------------------------- ledger epsilon
+def _route_always_sorted(member, load, queries, microbatch):
+    """The pre-epsilon balanced loop: a fresh (load, id) lexsort EVERY
+    microbatch — the oracle the cached permutation must reproduce."""
+    from repro.core.setcover import batched_cover_csr
+    from repro.online.router import queries_to_csr
+
+    spans_all, parts_all = [], []
+    for lo in range(0, len(queries), microbatch):
+        ptr, nodes = queries_to_csr(queries[lo: lo + microbatch])
+        order = np.lexsort((np.arange(member.shape[0]), load)).astype(np.int64)
+        cov = batched_cover_csr(ptr, nodes, member[order])
+        parts = order[cov.cover_parts]
+        load += np.bincount(parts, minlength=member.shape[0])
+        spans_all.append(cov.spans)
+        parts_all.append(parts)
+    return np.concatenate(spans_all), np.concatenate(parts_all)
+
+
+def test_router_ledger_epsilon_zero_identical(fitted):
+    """epsilon=0 (the default): the cached permutation rebuilds on any
+    ledger shift, so routing is bit-identical to re-sorting every
+    microbatch."""
+    hg, pl = fitted
+    queries = [hg.edge(e) for e in range(hg.num_edges)]
+    router = ReplicaRouter(pl.member, microbatch=64, balance=True)
+    batch = router.route(queries)
+    ref_spans, ref_parts = _route_always_sorted(
+        pl.member, np.zeros(pl.num_partitions), queries, 64
+    )
+    assert np.array_equal(batch.spans, ref_spans)
+    assert np.array_equal(batch.cover_parts, ref_parts)
+
+
+def test_router_ledger_epsilon_skips_sorts(fitted):
+    """A loose epsilon keeps the lexsort off the steady-state hot path
+    (fewer ledger_sorts than microbatches) while still serving every query
+    with valid covers."""
+    hg, pl = fitted
+    queries = [hg.edge(e) for e in range(hg.num_edges)]
+    flags.set_variant("routerbal1+routereps0.5+routermb32")
+    try:
+        router = ReplicaRouter(pl.member)
+        batch = router.route(queries)
+    finally:
+        flags.reset()
+    assert router.stats["ledger_sorts"] < router.stats["microbatches"]
+    assert len(batch.spans) == hg.num_edges
+    # covers are real covers: every span >= 1
+    assert (batch.spans >= 1).all()
+
+
+def test_router_epsilon_variant_validation():
+    with pytest.raises(ValueError):
+        flags.set_variant("routereps-1")
+    flags.reset()
 
 
 # --------------------------------------------------------------- run_online
@@ -300,6 +399,37 @@ def test_run_online_drift_swaps_plan():
     assert s["drift_fires"] >= 1 and s["plan_swaps"] >= 1
     assert s["refits"] == s["plan_swaps"]
     # the final layout must still honor capacity after every hot swap
+    assert (res.loads <= 30 + 1e-9).all()
+
+
+def test_run_online_drift_refits_through_long_outage():
+    """A partition dies early and never comes back; the workload then
+    shifts.  Drift adaptation must continue THROUGH the outage: the refit
+    runs on the failure-masked surviving layout and never places anything
+    on the dead partition."""
+    old = random_workload(num_items=120, num_queries=600, density=6, seed=2)
+    new = random_workload(num_items=120, num_queries=600, density=6, seed=9)
+    trace = Hypergraph.from_edges(
+        [old.hypergraph.edge(e) for e in range(200)]
+        + [new.hypergraph.edge(e) for e in range(600)],
+        num_nodes=120,
+    )
+    flags.set_variant("driftw128+driftth1.1+routermb64")
+    try:
+        sim = Simulator(10, 30)
+        res = sim.run_online(
+            old.hypergraph, ALGORITHMS["hpa"], name="hpa+drift", trace=trace,
+            service=PlacementService("lmbr", seed=0), refit_moves=128,
+            seed=0, events=[(50, "down", 0)],  # down for the whole trace
+        )
+    finally:
+        flags.reset()
+    s = res.summary()
+    assert s["partitions_down"] == 1
+    assert s["plan_swaps"] >= 1, "drift adaptation stalled during the outage"
+    assert s["refits"] == s["plan_swaps"]
+    # nothing was ever copied onto the dead partition, capacity holds
+    assert res.loads[0] == 0.0
     assert (res.loads <= 30 + 1e-9).all()
 
 

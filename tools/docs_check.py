@@ -34,7 +34,7 @@ sys.path.insert(0, str(REPO))  # for `benchmarks.*` modules
 from repro import flags  # noqa: E402
 
 FLAG_PREFIXES = ("span_", "lmbr_", "mla_", "moe_", "accum_", "sp_",
-                 "router_", "drift_")
+                 "router_", "drift_", "scale_")
 # flag-prefixed identifiers that are NOT flags (kernel / bench row names,
 # serving counters)
 NON_FLAGS = {"span_gain", "span_gain_calibration", "span_gain_ref",
@@ -43,7 +43,8 @@ NON_FLAGS = {"span_gain", "span_gain_calibration", "span_gain_ref",
 VARIANT_RE = re.compile(
     r"^(baseline|mla_decomp|sp2?|accum\d+|cf[\d.]+|spanth\d+|peelth\d+|"
     r"span(auto|numpy|jax|pallas)|peel(vector|reference|auto)|"
-    r"lmbrcache[01]|routerbal[01]|routermb\d+|driftw\d+|driftth[\d.]+)"
+    r"lmbrcache[01]|routerbal[01]|routermb\d+|routereps[\d.]+|"
+    r"driftw\d+|driftth[\d.]+|shards\d+|scalew\d+|brepair\d+)"
     r"(\+.+)?$"
 )
 
