@@ -22,9 +22,12 @@ test-fast:
 
 # cheap perf signal: span engine + LMBR move engine + online serving +
 # cluster-scale pipeline old-vs-new timings (BENCH_spans.json,
-# BENCH_lmbr.json, BENCH_online.json, BENCH_scale.json)
+# BENCH_lmbr.json, BENCH_online.json, BENCH_scale.json); the JSONs are
+# copied to the repo root as the committed baselines (results/ is
+# gitignored scratch)
 bench-smoke:
 	$(PY) -m benchmarks.run --only bench_spans,bench_lmbr,bench_online,bench_scale
+	cp benchmarks/results/BENCH_*.json .
 
 # full quick benchmark suite (all paper figures, single seed)
 bench:

@@ -96,6 +96,140 @@ def run(quick: bool = True) -> list[dict]:
           f"(flag default {_flags.FLAGS['span_dispatch_threshold']})",
           flush=True)
 
+    # tile-shape sweep: the Pallas span_gain kernel across candidate
+    # (block_a, block_n) tilings on randomized already-padded shapes,
+    # asserted exactly against the numpy oracle through the same
+    # uint64 -> uint32-lane split the dispatcher performs.  Integer kernel:
+    # any tiling that diverges from the oracle is a hard failure, so the
+    # (8, 128) default is validated beyond interpret smoke tests.
+    from repro.kernels.span_gain.kernel import span_gain as span_gain_kernel
+
+    tile_rng = np.random.default_rng(7)
+    for block_a, block_n in ((8, 128), (16, 128), (8, 256), (32, 128)):
+        At = block_a * int(tile_rng.integers(1, 4))
+        Nt = block_n * int(tile_rng.integers(1, 3))
+        Wt = int(tile_rng.integers(1, 4))
+        tcodes = tile_rng.integers(0, 2**63, size=(At, Nt, Wt),
+                                   dtype=np.uint64)
+        trem = tile_rng.integers(0, 2**63, size=(At, Wt), dtype=np.uint64)
+        tcodes[0, 0, 0] = np.uint64(0xFFFFFFFFFFFFFFFF)  # full-lane words
+        trem[0, 0] = np.uint64(0xFFFFFFFFFFFFFFFF)
+        c32 = (tcodes[..., None].view(np.uint32)
+               .reshape(At, Nt, 2 * Wt).transpose(0, 2, 1))
+        r32 = trem[..., None].view(np.uint32).reshape(At, 2 * Wt)
+        t0 = time.perf_counter()
+        got_t = np.asarray(span_gain_kernel(
+            np.ascontiguousarray(c32), r32, block_a=block_a,
+            block_n=block_n, interpret=True,
+        ))
+        t_tile = time.perf_counter() - t0
+        tile_err = int(np.abs(got_t - span_gain_ref(tcodes, trem)).max())
+        rows.append(dict(
+            kernel=f"span_gain_tile_{block_a}x{block_n}",
+            max_err=f"{tile_err:.2e}", interpret_s=round(t_tile, 3),
+            deploy_flops=f"{2.0 * At * Nt * Wt:.2e}",
+            deploy_ai=f"A={At} N={Nt} W={Wt}", mxu_bound=False,
+        ))
+        assert tile_err == 0, (block_a, block_n)
+    print(f"  span_gain tilings exact on randomized shapes", flush=True)
+
+    # whole-round cover-loop calibration: one uniform-size bucket through
+    # batched_cover_csr under the per-round host loop vs the device-resident
+    # lax.while_loop (span_round_backend).  Covers asserted identical; the
+    # wall-clock crossover feeds flags.FLAGS["span_round_threshold"].
+    from repro.core.hypergraph import Hypergraph
+    from repro.core.setcover import batched_cover_csr
+
+    cov_rng = np.random.default_rng(3)
+    n_items, n_parts = 4096, 32
+    member = cov_rng.random((n_parts, n_items)) < 0.25
+    member[0] |= ~member.any(axis=0)
+    round_sizes = (256, 2048, 8192) if quick else (256, 2048, 8192, 32768)
+    round_cross = None
+    for B in round_sizes:
+        qs = [cov_rng.choice(n_items, size=48, replace=False)
+              for _ in range(B)]
+        hgb = Hypergraph.from_edges(qs, num_nodes=n_items)
+        res, times = {}, {}
+        for backend in ("numpy", "device"):
+            _flags.FLAGS["span_round_backend"] = backend
+            try:
+                cov = batched_cover_csr(hgb.edge_ptr, hgb.edge_nodes, member)
+                t0 = time.perf_counter()
+                for _ in range(3):
+                    cov = batched_cover_csr(hgb.edge_ptr, hgb.edge_nodes,
+                                            member)
+                times[backend] = (time.perf_counter() - t0) / 3
+                res[backend] = (cov.spans, cov.cover_ptr, cov.cover_parts)
+            finally:
+                _flags.reset()
+        for w, g in zip(res["numpy"], res["device"]):
+            np.testing.assert_array_equal(g, w)
+        # W words per query at 48 items -> B * N * ceil(48/64) packed words
+        words = B * n_parts * 1
+        if round_cross is None and times["device"] < times["numpy"]:
+            round_cross = words
+        rows.append(dict(
+            kernel=f"span_round_calibration_{B}", max_err="0.00e+00",
+            interpret_s=round(times["device"], 5),
+            deploy_flops=f"{2.0 * words:.2e}",
+            deploy_ai=(f"numpy={times['numpy'] * 1e3:.2f}ms "
+                       f"device={times['device'] * 1e3:.2f}ms"),
+            mxu_bound=False,
+        ))
+    found_r = (f"~{round_cross} words" if round_cross is not None
+               else f"none up to {max(round_sizes) * n_parts} words")
+    print(f"  span_round host->device crossover {found_r} "
+          f"(flag default {_flags.FLAGS['span_round_threshold']})",
+          flush=True)
+
+    # lockstep-peel kernel (LMBR Algorithm 5, device-resident): interpret
+    # Pallas at correctness scale + the jitted jnp lockstep at batch scale,
+    # both against the f64 numpy oracle.  Integer weights: trajectories are
+    # f32-exact, so max_err must be 0.
+    from repro.kernels.lockstep_peel.ops import lockstep_peel
+    from repro.kernels.lockstep_peel.ref import lockstep_peel_ref
+
+    peel_rng = np.random.default_rng(5)
+    Gp, Kp, Up = (12, 24, 48) if quick else (32, 48, 96)
+    inc = np.zeros((Gp, Kp, Up), dtype=np.float64)
+    nvalid = peel_rng.integers(8, Up + 1, size=Gp).astype(np.int64)
+    for g in range(Gp):
+        for k in range(Kp):
+            pins = np.unique(peel_rng.integers(0, nvalid[g], size=4))
+            inc[g, k, pins] = 1.0
+    wep = peel_rng.integers(1, 9, size=(Gp, Kp)).astype(np.float64)
+    nodewp = np.zeros((Gp, Up), dtype=np.float64)
+    for g in range(Gp):
+        nodewp[g, : nvalid[g]] = peel_rng.integers(1, 5, size=int(nvalid[g]))
+    want_p = lockstep_peel_ref(inc, wep, nodewp, nvalid)
+    gi = 2  # interpret slice: pure-Python grid stepping is minutes at scale
+    t0 = time.perf_counter()
+    got_pi = lockstep_peel(inc[:gi], wep[:gi], nodewp[:gi], nvalid[:gi],
+                           force="interpret")
+    t_pint = time.perf_counter() - t0
+    perr = max(
+        int(np.abs(g - w[:gi]).max()) for g, w in zip(got_pi, want_p)
+    )
+    lockstep_peel(inc, wep, nodewp, nvalid, force="jax")  # jit warmup
+    t0 = time.perf_counter()
+    got_pj = lockstep_peel(inc, wep, nodewp, nvalid, force="jax")
+    t_pjax = time.perf_counter() - t0
+    perr = max(perr, max(
+        int(np.abs(g - w).max()) for g, w in zip(got_pj, want_p)
+    ))
+    # one peel round: argmin over U + 2 (K, U) contractions per pair
+    p_flops = 2.0 * Gp * Kp * Up * Up
+    p_bytes = Gp * Kp * Up * 4
+    rows.append(dict(
+        kernel="lockstep_peel", max_err=f"{perr:.2e}",
+        interpret_s=round(t_pint, 3),
+        deploy_flops=f"{p_flops:.2e}", deploy_ai=round(p_flops / p_bytes, 2),
+        mxu_bound=False,  # one-hot contractions stream VMEM, VPU-bound
+    ))
+    print(f"  lockstep_peel exact (jax batch {t_pjax * 1e3:.1f}ms)",
+          flush=True)
+
     # flash attention: correctness + roofline terms at deployment scale
     b, h, kh, s, d = 1, 4, 2, 256, 64
     q = jax.random.normal(key, (b, h, s, d), jnp.float32)

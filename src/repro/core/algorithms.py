@@ -26,7 +26,9 @@ from .hypergraph import Hypergraph
 from .setcover import (
     Placement,
     SpanMaintainer,
+    _accel_backend,
     batched_spans_csr,
+    engine_counters,
     greedy_set_cover,
 )
 
@@ -314,7 +316,11 @@ class _LMBRState:
     Epoch-keyed gain cache
     ----------------------
     ``max_gain(src, dest)`` memoizes Algorithm 5's (gain, items) per ordered
-    pair, stamped with three epochs it is a pure function of:
+    pair.  Validity is checked at one of two granularities
+    (``flags.FLAGS["lmbr_epochs"]``):
+
+    ``"partition"`` (the PR 5 scheme) stamps each entry with the epochs it
+    is a pure function of:
 
       * ``cov_epoch[p]``  — bumped by ``recompute_edges`` for every partition
         that gained or lost a pin attribution (the old and new serving
@@ -324,11 +330,27 @@ class _LMBRState:
         (and hence its free space and the free-pin mask) changes.
 
     A cached (src, dest) entry is valid iff cov_epoch[src], cov_epoch[dest]
-    and mem_epoch[dest] are all unchanged — then the recompute is skipped
-    and the cached result is returned verbatim (bit-identical by purity).
-    This collapses the O(N^2)-per-move rescan of Algorithm 4's refresh loop
-    to the touched frontier: pairs whose covers, shared sets, and destination
-    row did not change never re-peel.
+    and mem_epoch[dest] are all unchanged.  Under the move loop nearly every
+    move grazes some partition pair, so the hit rate is <1%.
+
+    ``"item"`` (default, PR 6) revalidates from the entry's OWN dependency
+    set instead: a global move ``tick``, ``edge_tick[e]`` (last tick whose
+    ``recompute_edges`` refreshed e's cover — conservative, stamps every
+    refreshed edge), and ``item_tick[v]`` (last tick that copied item v
+    somewhere).  An entry filled at tick t with shared-edge set ``sh`` and
+    candidate pool ``pool`` is valid iff the pair's shared-edge COUNT is
+    unchanged (O(1) off the maintained Gram matrix — an edge leaving the
+    shared set was re-stamped, so count-neutral swaps are caught by the
+    stamp, net changes by the count), ``edge_tick[sh].max() <= t`` and
+    ``item_tick[pool].max() <= t``; free space is re-evaluated live from
+    the cached trajectory (``_eval_traj``).  See ``_entry_hit`` for the
+    full soundness argument.
+
+    Either way a hit skips the recompute and returns the cached result
+    verbatim (bit-identical by purity).  This collapses the
+    O(N^2)-per-move rescan of Algorithm 4's refresh loop to the touched
+    frontier: pairs whose covers, shared sets, and destination row did not
+    change never re-peel.
 
     Mutation contract: membership changes MUST go through ``apply_move`` (or
     epochs go stale and the cache may serve outdated gains; direct
@@ -352,6 +374,15 @@ class _LMBRState:
             self._edge_mask[parts, np.repeat(np.arange(E), counts)] = True
         self.cov_epoch = np.zeros(n, dtype=np.int64)
         self.mem_epoch = np.zeros(n, dtype=np.int64)
+        # item-granular cache state (``flags.lmbr_epochs="item"``):
+        # edge_tick[e] records the move tick that last recomputed e's cover
+        # (conservative: any refresh stamps, changed or not), item_tick[v]
+        # the tick that last copied item v somewhere.  A cached pair
+        # revalidates from gathers over ITS OWN shared edges and candidate
+        # pool, so moves that cannot affect it never invalidate it.
+        self.edge_tick = np.zeros(E, dtype=np.int64)
+        self.item_tick = np.zeros(hg.num_nodes, dtype=np.int64)
+        self.tick = 0
         sizes = np.diff(hg.edge_ptr)
         self._esz_mean = float(sizes.mean()) if E else 0.0
         # pairwise shared-edge counts for the "auto" peel dispatch: built on
@@ -359,7 +390,19 @@ class _LMBRState:
         self._shared_cnt: np.ndarray | None = None
         self._loads = pl.partition_weights()
         self._gain_cache: dict[tuple[int, int], tuple] = {}
-        self.stats = dict(gain_calls=0, gain_cache_hits=0, moves=0)
+        self._traj_cache: dict[tuple[int, int], dict] = {}
+        # device-peel exactness gate: f32 sums of integer-valued weights
+        # below 2^24 are exact under any association order, so the dense
+        # backends are bit-identical to the f64 oracle exactly then
+        ew, nw = hg.edge_weights, hg.node_weights
+        self._int_exact = bool(
+            (ew.size == 0
+             or (np.all(ew == np.rint(ew)) and float(ew.sum()) < 2 ** 24))
+            and (nw.size == 0
+                 or (np.all(nw == np.rint(nw)) and float(nw.sum()) < 2 ** 24))
+        )
+        self.stats = dict(gain_calls=0, gain_cache_hits=0, gain_fp_hits=0,
+                          peel_pairs=0, moves=0)
 
     @property
     def part_edges(self) -> list[set[int]]:
@@ -391,6 +434,8 @@ class _LMBRState:
         self.pl.member[dest, items] = True
         self._loads[dest] += float(self.hg.node_weights[items].sum())
         self.mem_epoch[dest] += 1
+        self.tick += 1
+        self.item_tick[items] = self.tick
         self.stats["moves"] += 1
 
     def recompute_edges(self, edges: np.ndarray) -> None:
@@ -403,10 +448,7 @@ class _LMBRState:
             return
         _, pidx = self.hg.pin_indices(edges)
         old_pp = self.sm.pin_parts[pidx].copy()
-        old_sub = (
-            self._edge_mask[:, edges].astype(np.int64)
-            if self._shared_cnt is not None else None
-        )
+        old_sub = self._edge_mask[:, edges].copy()
         self._edge_mask[:, edges] = False
         self.sm.refresh_edges(edges)
         new_pp = self.sm.pin_parts[pidx]
@@ -419,9 +461,16 @@ class _LMBRState:
             if counts.sum() else np.zeros(0, dtype=np.int64)
         )
         self._edge_mask[parts, np.repeat(edges, counts)] = True
-        if old_sub is not None:
-            new_sub = self._edge_mask[:, edges].astype(np.int64)
-            self._shared_cnt += new_sub @ new_sub.T - old_sub @ old_sub.T
+        new_sub = self._edge_mask[:, edges]
+        # any refresh stamps its edges (conservative: attribution can change
+        # even when the cover set does not), behind its own tick bump so
+        # entries cached earlier in the same move can never alias the stamp
+        self.tick += 1
+        self.edge_tick[edges] = self.tick
+        if self._shared_cnt is not None:
+            o64 = old_sub.astype(np.int64)
+            n64 = new_sub.astype(np.int64)
+            self._shared_cnt += n64 @ n64.T - o64 @ o64.T
         changed = old_pp != new_pp
         if changed.any():
             touched = np.unique(
@@ -458,6 +507,154 @@ class _LMBRState:
                             count=len(pairs))
         return self._shared_cnt[srcs, dests] * self._esz_mean
 
+    # ----------------------------------------- item-granular gain cache
+    def _shared_count(self, key: tuple[int, int]) -> int:
+        """O(1) shared-edge count off the maintained Gram matrix."""
+        if self._shared_cnt is None:
+            m = self._edge_mask.astype(np.int64)
+            self._shared_cnt = m @ m.T
+        return int(self._shared_cnt[key])
+
+    def _entry_hit(self, key: tuple[int, int], ent: dict) -> bool:
+        """Level-1 validity of a trajectory-cache entry: two tick gathers
+        over the entry's OWN dependency footprint, no projection.
+
+        Soundness — the pair's projection is a pure function of:
+
+        * the covers / pin attributions of its shared edges, and every such
+          change goes through ``recompute_edges``, which stamps
+          ``edge_tick`` for all refreshed edges (conservatively: refreshed
+          but unchanged still stamps), so ``edge_tick[sh].max() <= tick``
+          proves the cached shared edges are untouched;
+        * the shared-edge SET itself — an edge can only LEAVE it via a
+          cover change (stamped, and it is in the cached ``sh``), so a
+          count-preserving swap is caught by the leaving edge's tick and a
+          net gain by the O(1) count compare;
+        * which candidate-pool items are resident on dest — items only ever
+          gain residency, and any copy of a pool item is caught by the
+          per-item tick check (a copy of a non-pool item cannot change this
+          pair's costly-pin set);
+        * immutable node / edge weights.
+
+        The destination's free space is NOT part of validity: trajectories
+        are free-space-independent and re-evaluated under the live free
+        space on every hit (empty projections stay empty under any of these
+        checks, and a zero from exhausted free space stays zero because
+        free space only shrinks).  Result-only entries (``strict``: the
+        pure-Python oracle emits no trajectory) instead pin the global move
+        tick, so they only serve while no mutation at all intervened."""
+        if ent["strict"]:
+            return ent["tick"] == self.tick
+        if ent["scnt"] != self._shared_count(key):
+            return False
+        t = ent["tick"]
+        sh = ent["sh"]
+        if len(sh) and int(self.edge_tick[sh].max()) > t:
+            return False
+        pool = ent["pool"]
+        if pool is None or not len(pool):
+            return True
+        return int(self.item_tick[pool].max()) <= t
+
+    def _entry_eval(self, key: tuple[int, int], ent: dict):
+        if ent["res"] is not None:
+            return ent["res"]
+        return _eval_traj(ent["pool"], ent["traj"], self.free_space(key[1]))
+
+    def _cache_put(self, key, *, pool=None, fp=None, traj=None, res=None,
+                   strict=False):
+        if strict:
+            sh, scnt = None, -1
+        else:
+            sh = np.flatnonzero(
+                self._edge_mask[key[0]] & self._edge_mask[key[1]]
+            )
+            scnt = len(sh)
+        self._traj_cache[key] = dict(
+            tick=self.tick, sh=sh, scnt=scnt, pool=pool, fp=fp,
+            traj=traj, res=res, strict=strict,
+        )
+
+    def _peel_with_traj(self, proj: list[tuple], backend: str):
+        """Peel projected pairs, returning {key: (pool, fp, traj)}.  The
+        dense device backends only engage on the integer-exact domain (and
+        with jax importable); everything else — including fallback — runs
+        the flat numpy lockstep with trajectory recording."""
+        if (backend in ("device", "pallas") and self._int_exact
+                and _accel_backend() is not None):
+            try:
+                return _lmbr_peel_dense(self, proj, backend)
+            except Exception:
+                pass  # fall through to the bit-identical flat engine
+        return _lmbr_peel_flat(self, proj, collect_traj=True)
+
+    def _max_gain_many_item(self, pairs, use_cache: bool):
+        out: dict[tuple[int, int], tuple] = {}
+        cache = self._traj_cache
+        misses: list[tuple[int, int]] = []
+        seen: set[tuple[int, int]] = set()
+        for key in pairs:
+            if key in seen:
+                continue
+            seen.add(key)
+            if use_cache:
+                ent = cache.get(key)
+                if ent is not None and self._entry_hit(key, ent):
+                    self.stats["gain_cache_hits"] += 1
+                    out[key] = self._entry_eval(key, ent)
+                    continue
+            misses.append(key)
+        if not misses:
+            return out
+        backend = _flags.FLAGS.get("lmbr_peel", "vector")
+        if backend == "reference":
+            ref_keys, rest = misses, []
+        elif backend == "auto":
+            thresh = int(_flags.FLAGS.get("lmbr_peel_threshold", 256))
+            bounds = self._peel_width_bounds(misses)
+            ref_keys = [k for k, b in zip(misses, bounds) if b < thresh]
+            rest = [k for k, b in zip(misses, bounds) if b >= thresh]
+        else:
+            ref_keys, rest = [], misses
+        for k in ref_keys:
+            res = _lmbr_max_gain_reference(self, *k)
+            out[k] = res
+            if use_cache:
+                self._cache_put(k, res=res, strict=True)
+        if rest:
+            zero, proj = _lmbr_project(self, rest)
+            for k, res in zero.items():
+                out[k] = res
+                if use_cache:
+                    # empty projections are free-space-monotone (free space
+                    # only shrinks within a fit), so stamp-valid is enough
+                    self._cache_put(k, res=res)
+            peel_list = []
+            for p in proj:
+                k = p[0]
+                ent = cache.get(k) if use_cache else None
+                if (ent is not None and ent["fp"] is not None
+                        and _fp_equal(ent["fp"], p)):
+                    # level 2: identical projection -> the cached trajectory
+                    # is byte-for-byte what a re-peel would produce; re-file
+                    # it under the CURRENT dependency footprint
+                    self.stats["gain_fp_hits"] += 1
+                    self._cache_put(k, pool=ent["pool"], fp=ent["fp"],
+                                    traj=ent["traj"])
+                    out[k] = _eval_traj(ent["pool"], ent["traj"], p[1])
+                    continue
+                peel_list.append(p)
+            if peel_list:
+                self.stats["peel_pairs"] += len(peel_list)
+                peeled = self._peel_with_traj(peel_list, backend)
+                for p in peel_list:
+                    k = p[0]
+                    pool, fp, traj = peeled[k]
+                    out[k] = _eval_traj(pool, traj, p[1])
+                    if use_cache:
+                        self._cache_put(k, pool=pool, fp=fp, traj=traj)
+        return out
+
     def max_gain_many(self, pairs: list[tuple[int, int]]):
         """Epoch-cached batch gain evaluation.  Cache hits are answered from
         the memo; the misses run through ONE lockstep batched peel (or the
@@ -466,9 +663,18 @@ class _LMBRState:
         ``flags.FLAGS["lmbr_peel_threshold"]`` to the oracle — on sparse
         near-span-1 workloads tiny peels beat the batch-array assembly —
         and batches the rest; all backends are bit-identical).
+
+        Cache granularity follows ``flags.lmbr_epochs``: "item" (default)
+        runs the two-level item-granular cache — per-pair epoch stamps plus
+        a per-item tick intersection, then a projection fingerprint — and
+        re-evaluates cached free-space-independent peel trajectories under
+        the live free space; "partition" restores the PR 5 per-partition
+        epoch memo.  Both are exactness-neutral.
         Returns {pair: (gain, items)} covering every requested pair."""
         self.stats["gain_calls"] += len(pairs)
         use_cache = _flags.FLAGS.get("lmbr_gain_cache", True)
+        if _flags.FLAGS.get("lmbr_epochs", "item") == "item":
+            return self._max_gain_many_item(pairs, use_cache)
         out: dict[tuple[int, int], tuple] = {}
         misses: list[tuple[int, int]] = []
         pending: set[tuple[int, int]] = set()
@@ -711,15 +917,132 @@ def _project_fan_out(state, src, dests, out, proj):
         ))
 
 
+def _eval_traj(pool: np.ndarray, traj, c: float):
+    """Select (gain, items) from a peel trajectory under free space ``c``.
+
+    The single selection rule shared by the cache-revalidation path and the
+    dense device backends: float64 ``benefit / max(weight, 1e-12)`` over
+    the head-of-round states that fit (``totw <= c + 1e-12``), earliest
+    round on gain ties (``argmax`` first occurrence == the oracle's
+    strict-improvement recording), surviving items = pool minus the first r
+    peeled.  Trajectories never depend on ``c`` (the peel order ignores
+    free space), which is what makes cached entries re-evaluable as the
+    destination fills up."""
+    if traj is None or c <= 1e-12:
+        return 0.0, None
+    order, rtot, rben = traj
+    fits = rtot <= c + 1e-12
+    if not fits.any():
+        return 0.0, None
+    gains = rben / np.maximum(rtot, 1e-12)
+    r = int(np.argmax(np.where(fits, gains, -np.inf)))
+    keep = np.ones(len(pool), dtype=bool)
+    keep[order[:r]] = False
+    return float(gains[r]), pool[keep]
+
+
+def _fp_equal(fp: tuple, p: tuple) -> bool:
+    """Projection fingerprint equality: identical kept-edge weights, item
+    pool, pin->item and pin->edge maps, and per-edge pin counts.  Equal
+    fingerprints mean the peel inputs are identical, so the cached
+    trajectory is exactly what a re-peel would produce."""
+    return all(
+        x.shape == y.shape and np.array_equal(x, y)
+        for x, y in zip(fp, (p[2], p[3], p[4], p[5], p[6]))
+    )
+
+
+def _lmbr_project(state: _LMBRState, pairs: list[tuple[int, int]]):
+    """Shared-gather projection of many pairs.  Returns (zero, proj):
+    ``zero`` maps pairs with an empty projection to (0.0, None); ``proj``
+    holds one peel-input tuple per remaining pair.
+
+    Grouping: fan-in pairs (*, d) reuse one gather of d's covered edges
+    (blocks split by serving partition); the rest group by src, reusing one
+    gather of src's served pins across destinations."""
+    zero: dict[tuple[int, int], tuple] = {}
+    proj: list[tuple] = []  # (key, c_dest, we, uniq, loc, cedge, pin_cnt, totw0)
+    by_dest: dict[int, list[int]] = {}
+    for s, d in pairs:
+        by_dest.setdefault(d, []).append(s)
+    by_src: dict[int, list[int]] = {}
+    for d, srcs in by_dest.items():
+        if len(srcs) >= 2:
+            _project_fan_in(state, d, srcs, zero, proj)
+        else:
+            by_src.setdefault(srcs[0], []).append(d)
+    for s, dests in by_src.items():
+        _project_fan_out(state, s, dests, zero, proj)
+    return zero, proj
+
+
 def _lmbr_gain_batch(state: _LMBRState, pairs: list[tuple[int, int]]):
     """Batched Algorithm 5: evaluate MANY (src, dest) candidates in one
     lockstep peel.  Returns {(src, dest): (gain, items-or-None)}, each entry
-    bit-identical to the pure-Python oracle run on that pair alone.
+    bit-identical to the pure-Python oracle run on that pair alone."""
+    out, proj = _lmbr_project(state, pairs)
+    if proj:
+        out.update(_lmbr_peel_flat(state, proj))
+    return out
 
-    Projection (per pair, flat): the pins of all shared edges are gathered
-    once and masked to the costly ones — served by src per the maintainer's
-    flat ``pin_parts`` attribution, and not already resident on dest (free
-    pins cost 0 and are never peeled).  No per-edge cover dicts are built.
+
+def _lmbr_peel_dense(state: _LMBRState, proj: list[tuple], backend: str):
+    """Device-resident lockstep peel (``lmbr_peel="device"|"pallas"``):
+    densify each pair's projection into a (K, U) incidence cell and run
+    every round on device via ``repro.kernels.lockstep_peel``.  Only the
+    free-space-independent trajectories come back; selection happens in
+    ``_eval_traj``.  Caller guarantees the integer-exact weight domain, so
+    the f32 trajectories are bit-identical to the flat f64 engine's.
+    Returns {key: (pool, fp, traj)} like ``_lmbr_peel_flat``."""
+    from ..kernels.lockstep_peel.ops import lockstep_peel
+
+    force = "jax" if backend == "device" else "pallas"
+    node_w = state.hg.node_weights
+    out: dict[tuple[int, int], tuple] = {}
+    classes: dict[tuple[int, int], list[tuple]] = {}
+    huge: list[tuple] = []
+    for p in proj:
+        u2 = 1 << max(2, (len(p[3]) - 1).bit_length())
+        k2 = 1 << max(2, (len(p[2]) - 1).bit_length())
+        # a single pathological pair can dwarf the batch; densifying it
+        # would blow memory, so it keeps the flat CSR engine
+        if u2 * k2 > 1 << 22:
+            huge.append(p)
+        else:
+            classes.setdefault((u2, k2), []).append(p)
+    for (u2, k2), plist in classes.items():
+        chunk = max(1, (1 << 22) // (u2 * k2))
+        for lo in range(0, len(plist), chunk):
+            sub = plist[lo: lo + chunk]
+            G = len(sub)
+            inc = np.zeros((G, k2, u2), dtype=np.float64)
+            wem = np.zeros((G, k2), dtype=np.float64)
+            nwm = np.zeros((G, u2), dtype=np.float64)
+            nv = np.zeros(G, dtype=np.int64)
+            for i, p in enumerate(sub):
+                _, _, we, uniq, loc, cedge, _, _ = p
+                inc[i, cedge, loc] = 1.0
+                wem[i, : len(we)] = we
+                nwm[i, : len(uniq)] = node_w[uniq]
+                nv[i] = len(uniq)
+            peel, rtot, rben = lockstep_peel(inc, wem, nwm, nv, force=force)
+            done = peel < 0  # -1s are a suffix: active never resumes
+            for i, p in enumerate(sub):
+                R = int(np.argmax(done[i])) if done[i].any() else peel.shape[1]
+                traj = (
+                    (peel[i, :R].copy(), rtot[i, :R].copy(),
+                     rben[i, :R].copy())
+                    if R else None
+                )
+                out[p[0]] = (p[3], (p[2], p[3], p[4], p[5], p[6]), traj)
+    if huge:
+        out.update(_lmbr_peel_flat(state, huge, collect_traj=True))
+    return out
+
+
+def _lmbr_peel_flat(state: _LMBRState, proj: list[tuple],
+                    collect_traj: bool = False):
+    """Flat lockstep peel over projected pairs.
 
     Peel (all pairs in lockstep): pair-local items live in dense (G, Umax)
     matrices (degree, alive, weight), edges in flat CSR arrays.  Each round
@@ -732,27 +1055,15 @@ def _lmbr_gain_batch(state: _LMBRState, pairs: list[tuple[int, int]]):
     the round set when their remaining benefit or item pool is exhausted.
     Because every pair's float-op sequence is unchanged from its solo run,
     lockstep execution cannot perturb results — same subsets, same gain
-    floats, even under adversarial near-ties."""
+    floats, even under adversarial near-ties.
+
+    Returns {key: (gain, items)} by default (best state tracked in-loop);
+    with ``collect_traj`` the head-of-round states are recorded instead and
+    the return is {key: (pool, fp, traj)} for ``_eval_traj`` / the
+    trajectory cache — same rounds, same floats, one selection rule."""
     hg = state.hg
     node_w = hg.node_weights
     out: dict[tuple[int, int], tuple] = {}
-    proj = []  # (key, c_dest, we, uniq, loc, cedge, pin_cnt, totw0)
-    # shared-projection grouping: fan-in pairs (*, d) reuse one gather of
-    # d's covered edges (blocks split by serving partition); the rest group
-    # by src, reusing one gather of src's served pins across destinations
-    by_dest: dict[int, list[int]] = {}
-    for s, d in pairs:
-        by_dest.setdefault(d, []).append(s)
-    by_src: dict[int, list[int]] = {}
-    for d, srcs in by_dest.items():
-        if len(srcs) >= 2:
-            _project_fan_in(state, d, srcs, out, proj)
-        else:
-            by_src.setdefault(srcs[0], []).append(d)
-    for s, dests in by_src.items():
-        _project_fan_out(state, s, dests, out, proj)
-    if not proj:
-        return out
 
     # ---- flat batch assembly
     G = len(proj)
@@ -782,6 +1093,32 @@ def _lmbr_gain_batch(state: _LMBRState, pairs: list[tuple[int, int]]):
         inc_cnt[i, : U[i]] = np.bincount(p[4], minlength=U[i])
     inc_ptr = np.zeros(G * Umax + 1, dtype=np.int64)
     np.cumsum(inc_cnt.ravel(), out=inc_ptr[1:])
+    # dense padded index tables: slot -> incident edges and edge -> pin
+    # indices, -1-padded to the widest row.  Each round then runs ONE fancy
+    # gather + mask instead of a CSR ranged gather (whose cumsum/repeat
+    # chains dominate the loop); row-major flattening preserves the exact
+    # scan order (edges ascending within a slot, pins in edge order), so
+    # every np.add.at sequence — hence every float — is unchanged.  CSR
+    # stays the fallback for pathologically wide rows.
+    emax = int(inc_cnt.max()) if inc_cnt.size else 0
+    pmax = int(pin_cnt_flat.max()) if pin_cnt_flat.size else 0
+    E_flat = int(ebase[-1])
+    use_dense = (0 < emax <= 32 and G * Umax * emax < (1 << 24)
+                 and 0 < pmax <= 64 and E_flat * pmax < (1 << 24))
+    if use_dense:
+        cnt_r = inc_cnt.ravel()
+        inc_dense = np.full((G * Umax, emax), -1, dtype=np.int64)
+        inc_dense[
+            np.repeat(np.arange(G * Umax, dtype=np.int64), cnt_r),
+            np.arange(len(inc_edges), dtype=np.int64)
+            - np.repeat(inc_ptr[:-1], cnt_r),
+        ] = inc_edges
+        pin_dense = np.full((E_flat, pmax), -1, dtype=np.int64)
+        pin_dense[
+            np.repeat(np.arange(E_flat, dtype=np.int64), pin_cnt_flat),
+            np.arange(len(pin_col), dtype=np.int64)
+            - np.repeat(eptr[:-1], pin_cnt_flat),
+        ] = np.arange(len(pin_col), dtype=np.int64)
     # dense per-item state: +inf padding so argmin never picks a pad slot
     valid = np.arange(Umax, dtype=np.int64)[None, :] < U[:, None]
     cand = np.full((G, Umax), np.inf, dtype=np.float64)
@@ -805,47 +1142,96 @@ def _lmbr_gain_batch(state: _LMBRState, pairs: list[tuple[int, int]]):
     has_best = np.zeros(G, dtype=bool)
 
     # ---- lockstep weighted peel (getKDensestNodes, Asahiro-style greedy)
+    rec_rows: list[np.ndarray] = []
+    rec_j: list[np.ndarray] = []
+    rec_tot: list[np.ndarray] = []
+    rec_ben: list[np.ndarray] = []
     act = np.flatnonzero((benefit > 1e-12) & (n_alive > 0))
     while len(act):
-        # record states that fit the destination's free space
         t = totw[act]
-        fits = t <= c_arr[act] + 1e-12
-        if fits.any():
-            rows = act[fits]
-            g = benefit[rows] / np.maximum(t[fits], 1e-12)
-            imp = g > best_gain[rows]
-            if imp.any():
-                r2 = rows[imp]
-                best_gain[r2] = g[imp]
-                best_set[r2] = alive[r2]
-                has_best[r2] = True
+        if collect_traj:
+            # head-of-round snapshot (the fancy-index gathers are already
+            # fresh arrays); selection is deferred to _eval_traj
+            rec_rows.append(act)
+            rec_tot.append(t)
+            rec_ben.append(benefit[act])
+        else:
+            # record states that fit the destination's free space
+            fits = t <= c_arr[act] + 1e-12
+            if fits.any():
+                rows = act[fits]
+                g = benefit[rows] / np.maximum(t[fits], 1e-12)
+                imp = g > best_gain[rows]
+                if imp.any():
+                    r2 = rows[imp]
+                    best_gain[r2] = g[imp]
+                    best_set[r2] = alive[r2]
+                    has_best[r2] = True
         # peel each active pair's lowest-degree item (ties -> lowest id)
         j = np.argmin(cand[act], axis=1)
+        if collect_traj:
+            rec_j.append(j)
         alive[act, j] = False
         cand[act, j] = np.inf
         n_alive[act] -= 1
         totw[act] -= nodew[act, j]
         # retire this round's dying edges (ascending within each pair)
         slot = act * Umax + j
-        idx, _ = _ranged_gather(inc_ptr[slot], inc_ptr[slot + 1])
-        cand_e = inc_edges[idx]
+        if use_dense:
+            ec = inc_dense[slot]                  # (A, emax), -1 padded
+            cand_e = ec[ec >= 0]
+        else:
+            idx, _ = _ranged_gather(inc_ptr[slot], inc_ptr[slot + 1])
+            cand_e = inc_edges[idx]
         de = cand_e[edge_alive[cand_e]]
         if len(de):
             edge_alive[de] = False
             np.add.at(benefit, pair_of_edge[de], -we_flat[de])
-            pidx2, dsz = _ranged_gather(eptr[de], eptr[de + 1])
-            cols = pin_col[pidx2]
-            rows_t = np.repeat(pair_of_edge[de], dsz)
-            wrep = np.repeat(we_flat[de], dsz)
+            if use_dense:
+                pd = pin_dense[de]                # (D, pmax), -1 padded
+                pm = pd >= 0
+                cols = pin_col[pd[pm]]
+                rows_t = np.broadcast_to(
+                    pair_of_edge[de][:, None], pd.shape)[pm]
+                wrep = np.broadcast_to(we_flat[de][:, None], pd.shape)[pm]
+            else:
+                pidx2, dsz = _ranged_gather(eptr[de], eptr[de + 1])
+                cols = pin_col[pidx2]
+                rows_t = np.repeat(pair_of_edge[de], dsz)
+                wrep = np.repeat(we_flat[de], dsz)
             lv = alive[rows_t, cols]     # dead items never re-compared
             np.add.at(cand, (rows_t[lv], cols[lv]), -wrep[lv])
         act = act[(benefit[act] > 1e-12) & (n_alive[act] > 0)]
 
+    if not collect_traj:
+        for i, p in enumerate(proj):
+            if has_best[i]:
+                out[p[0]] = (float(best_gain[i]), p[3][best_set[i, : U[i]]])
+            else:
+                out[p[0]] = (0.0, None)
+        return out
+
+    # ---- group the recorded rounds back into per-pair trajectories
+    # (stable sort by pair keeps round order within each pair)
+    rows_all = (np.concatenate(rec_rows) if rec_rows
+                else np.zeros(0, dtype=np.int64))
+    j_all = (np.concatenate(rec_j) if rec_j
+             else np.zeros(0, dtype=np.int64))
+    tot_all = (np.concatenate(rec_tot) if rec_tot
+               else np.zeros(0, dtype=np.float64))
+    ben_all = (np.concatenate(rec_ben) if rec_ben
+               else np.zeros(0, dtype=np.float64))
+    order = np.argsort(rows_all, kind="stable")
+    counts = np.bincount(rows_all, minlength=G)
+    ptr = np.zeros(G + 1, dtype=np.int64)
+    np.cumsum(counts, out=ptr[1:])
     for i, p in enumerate(proj):
-        if has_best[i]:
-            out[p[0]] = (float(best_gain[i]), p[3][best_set[i, : U[i]]])
-        else:
-            out[p[0]] = (0.0, None)
+        sl = order[ptr[i]: ptr[i + 1]]
+        traj = (
+            (j_all[sl].astype(np.int64), tot_all[sl], ben_all[sl])
+            if len(sl) else None
+        )
+        out[p[0]] = (p[3], (p[2], p[3], p[4], p[5], p[6]), traj)
     return out
 
 
@@ -895,6 +1281,7 @@ def lmbr(
         )
         assign = hpa_mod.partition(hg, n, bal_cap, seed=seed, nruns=nruns)
         pl = _assign_to_placement(hg, assign, n, capacity)
+    eng0 = engine_counters()
     state = _LMBRState(hg, pl)
     if max_moves is None:
         max_moves = 50 * n
@@ -958,9 +1345,15 @@ def lmbr(
                     pairs.append((dest, g))
         pairs.append((src, dest))
         push_many(pairs)
+    calls = state.stats["gain_calls"]
+    hits = state.stats["gain_cache_hits"] + state.stats["gain_fp_hits"]
+    eng1 = engine_counters()
     pl.stats = dict(
         state.stats, peel=_flags.FLAGS.get("lmbr_peel", "vector"),
         gain_cache=bool(_flags.FLAGS.get("lmbr_gain_cache", True)),
+        lmbr_epochs=_flags.FLAGS.get("lmbr_epochs", "item"),
+        cache_hit_rate=(hits / calls) if calls else 0.0,
+        cover_engine={k: eng1[k] - eng0[k] for k in eng0},
     )
     return pl
 

@@ -49,7 +49,8 @@ class PlacementPlan:
     capacity: float
     node_weights: np.ndarray
     algorithm: str
-    # optional fitter diagnostics (e.g. the sharded pipeline's stage stats);
+    # optional fitter diagnostics (the sharded pipeline's stage stats, the
+    # LMBR engine's gain-cache hit rate / device-cover round counters);
     # never serialized, never placement-semantic
     stats: dict | None = None
 
@@ -176,7 +177,10 @@ class PlacementService:
         fn = ALGORITHMS[self.algorithm]
         pl = fn(hg, num_partitions, capacity, seed=self.seed, nruns=self.nruns)
         pl.validate()
-        return PlacementPlan(pl.member, capacity, hg.node_weights, self.algorithm)
+        return PlacementPlan(
+            pl.member, capacity, hg.node_weights, self.algorithm,
+            stats=pl.stats,
+        )
 
     # -------------------------------------------------------------- sharded
     def fit_sharded(
@@ -302,5 +306,6 @@ class PlacementService:
         )
         pl.validate()
         return PlacementPlan(
-            pl.member, plan.capacity, plan.node_weights, f"{plan.algorithm}+refit"
+            pl.member, plan.capacity, plan.node_weights,
+            f"{plan.algorithm}+refit", stats=pl.stats,
         )

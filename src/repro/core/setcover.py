@@ -281,6 +281,115 @@ def _gain_matrix(codes: np.ndarray, rem: np.ndarray) -> np.ndarray:
         return _gains_numpy(codes, rem)
 
 
+# ---------------------------------------------- device-resident round loop
+# Engine-level dispatch counters (observability, not control flow): how many
+# word-count buckets resolved on which cover loop and how many greedy rounds
+# each side ran.  `lmbr`/`PlacementService` snapshot deltas into
+# Placement.stats; benchmarks read them to report transfer counts.
+ENGINE_COUNTERS = {
+    "device_buckets": 0,
+    "host_buckets": 0,
+    "device_rounds": 0,
+    "host_rounds": 0,
+}
+
+
+def engine_counters() -> dict:
+    """Snapshot of the cover-engine dispatch counters."""
+    return dict(ENGINE_COUNTERS)
+
+
+_ROUND_LOOPS: dict[tuple[int, int, int, int], object] = {}
+
+
+def _round_loop_fn(B: int, N: int, W2: int, Rmax: int):
+    """Compile (and cache) the jitted whole-round cover loop for one padded
+    bucket shape.
+
+    The loop fuses mask+popcount+argmax+scatter for EVERY greedy round of
+    the bucket inside one `lax.while_loop`, so cover state (remaining-bit
+    words, chosen matrix) stays device-resident: one upload of the packed
+    codes, one download of the chosen matrix, zero per-round transfers.
+
+    Exactness contract (mirrors the host loop bit-for-bit): gains are
+    integer popcounts summed over uint32 lanes, `argmax` takes the first
+    maximum (ties -> lowest partition id), and a query whose max gain hits
+    zero while bits remain raises in the host path — here it sets a `bad`
+    flag and terminates the row, and the caller re-runs the bucket on host
+    to raise the identical ValueError.
+    """
+    key = (B, N, W2, Rmax)
+    fn = _ROUND_LOOPS.get(key)
+    if fn is not None:
+        return fn
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def loop(codes, rem):  # codes (B, N, W2) uint32, rem (B, W2) uint32
+        ch0 = jnp.full((Rmax, B), -1, dtype=jnp.int32)
+        bad0 = jnp.zeros((B,), dtype=bool)
+
+        def cond(state):
+            r, rem, ch, bad = state
+            return (r < Rmax) & jnp.any(rem != 0)
+
+        def body(state):
+            r, rem, ch, bad = state
+            active = jnp.any(rem != 0, axis=1)
+            g = (
+                lax.population_count(codes & rem[:, None, :])
+                .astype(jnp.int32)
+                .sum(axis=2)
+            )
+            p = jnp.argmax(g, axis=1).astype(jnp.int32)
+            gmax = jnp.take_along_axis(g, p[:, None], axis=1)[:, 0]
+            newbad = active & (gmax == 0)
+            ok = active & ~newbad
+            sel = jnp.take_along_axis(codes, p[:, None, None], axis=1)[:, 0]
+            rem = jnp.where(ok[:, None], rem & ~sel, rem)
+            # bad rows terminate (their chosen stays -1); the caller falls
+            # back to the host loop to raise the exact engine error
+            rem = jnp.where(newbad[:, None], jnp.uint32(0), rem)
+            ch = ch.at[r].set(jnp.where(ok, p, jnp.int32(-1)))
+            return r + 1, rem, ch, bad | newbad
+
+        _, _, ch, bad = lax.while_loop(
+            cond, body, (jnp.int32(0), rem, ch0, bad0)
+        )
+        return ch, bad
+
+    fn = jax.jit(loop)
+    _ROUND_LOOPS[key] = fn
+    return fn
+
+
+def _device_cover_rounds(codes: np.ndarray, rem: np.ndarray):
+    """Resolve one packed bucket on device.  codes (B, N, W) uint64, rem
+    (B, W) uint64 -> ch (B, R) int64, or None to fall back to the host loop
+    (jax unavailable, or a query in the bucket is uncoverable — the host
+    loop then raises the canonical error)."""
+    B, N, W = codes.shape
+    if B == 0:
+        return np.zeros((0, 0), dtype=np.int64)
+    try:
+        B2 = 1 << max(3, (B - 1).bit_length())  # pow2 pad bounds jit churn
+        Rmax = min(N, _WORD * W)
+        fn = _round_loop_fn(B2, N, 2 * W, Rmax)
+        c32 = np.zeros((B2, N, 2 * W), dtype=np.uint32)
+        c32[:B] = codes.view(np.uint32).reshape(B, N, 2 * W)
+        r32 = np.zeros((B2, 2 * W), dtype=np.uint32)
+        r32[:B] = rem.view(np.uint32).reshape(B, 2 * W)
+        ch_d, bad_d = fn(c32, r32)
+        ch = np.asarray(ch_d)[:, :B]
+        if np.asarray(bad_d)[:B].any():
+            return None
+    except Exception:
+        return None
+    used = int((ch >= 0).any(axis=1).sum())  # rounds are prefix-dense
+    return ch[:used].T.astype(np.int64)
+
+
 @dataclasses.dataclass
 class WorkloadCover:
     """Batched cover of a CSR query set.
@@ -352,6 +461,24 @@ def _cover_bucket(edge_ptr, edge_nodes, member, b_idx, W, spans, pin_parts):
         low = (np.uint64(1) << bits.clip(0, _WORD - 1).astype(np.uint64)) - np.uint64(1)
         rem[:, j] = np.where(bits >= _WORD, np.uint64(0xFFFFFFFFFFFFFFFF), low)
 
+    # whole-bucket backend dispatch: device-resident round loop for big
+    # buckets (one transfer total), per-round host loop otherwise.  Both
+    # are bit-identical (see _round_loop_fn), so this is purely perf.
+    ch = None
+    round_backend = _flags.FLAGS.get("span_round_backend", "auto")
+    if round_backend == "auto":
+        thresh = int(_flags.FLAGS.get("span_round_threshold", 200_000))
+        round_backend = "device" if codes.size >= thresh else "numpy"
+    if round_backend == "device" and _accel_backend() is not None:
+        ch = _device_cover_rounds(codes, rem)
+    if ch is not None:
+        ENGINE_COUNTERS["device_buckets"] += 1
+        ENGINE_COUNTERS["device_rounds"] += ch.shape[1]
+        spans[b_idx] = (ch >= 0).sum(axis=1)
+        _attribute_pins(ch, member, b_idx, edge_ptr, pin_e, pos, pins,
+                        pin_parts)
+        return ch
+
     rounds: list[tuple[np.ndarray, np.ndarray]] = []
     if W == 1:
         # single-word fast path (queries of <= 64 pins, the dominant online
@@ -403,20 +530,29 @@ def _cover_bucket(edge_ptr, edge_nodes, member, b_idx, W, spans, pin_parts):
     ch = np.full((B, R), -1, dtype=np.int64)
     for r, (ai, pi) in enumerate(rounds):
         ch[ai, r] = pi
+    ENGINE_COUNTERS["host_buckets"] += 1
+    ENGINE_COUNTERS["host_rounds"] += R
     spans[b_idx] = (ch >= 0).sum(axis=1)
-
-    if pin_parts is not None and P:
-        assigned = np.full(P, -1, dtype=np.int64)
-        for r in range(R):
-            pe = ch[pin_e, r]
-            idx = np.flatnonzero((assigned < 0) & (pe >= 0))
-            if not len(idx):
-                continue
-            hit = member[pe[idx], pins[idx]]
-            sel = idx[hit]
-            assigned[sel] = pe[sel]
-        pin_parts[edge_ptr[b_idx][pin_e] + pos] = assigned
+    _attribute_pins(ch, member, b_idx, edge_ptr, pin_e, pos, pins, pin_parts)
     return ch
+
+
+def _attribute_pins(ch, member, b_idx, edge_ptr, pin_e, pos, pins, pin_parts):
+    """Replica-selection attribution: for every pin, the first chosen round
+    whose partition stores the item serves it (matches `greedy_set_cover`'s
+    `accessed` ordering)."""
+    if pin_parts is None or not len(pins):
+        return
+    assigned = np.full(len(pins), -1, dtype=np.int64)
+    for r in range(ch.shape[1]):
+        pe = ch[pin_e, r]
+        idx = np.flatnonzero((assigned < 0) & (pe >= 0))
+        if not len(idx):
+            continue
+        hit = member[pe[idx], pins[idx]]
+        sel = idx[hit]
+        assigned[sel] = pe[sel]
+    pin_parts[edge_ptr[b_idx][pin_e] + pos] = assigned
 
 
 def batched_cover_csr(

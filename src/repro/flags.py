@@ -39,12 +39,52 @@ FLAGS = {
     # and the jitted backend past that (dispatch + uint32-view overhead
     # amortized), so the default sits mid-band.
     "span_dispatch_threshold": 48_000,
+    # whole-round cover-loop backend.  "auto" (default) dispatches per
+    # BUCKET: buckets whose packed gain work (B * N * W words) is below
+    # span_round_threshold run the per-round host loop (one numpy/jax gain
+    # matrix per greedy round, the PR 5 engine); larger buckets run the
+    # device-resident round loop — packed membership words and cover state
+    # are uploaded once and a jitted lax.while_loop fuses
+    # mask+popcount+argmax+scatter across ALL greedy rounds, so the bucket
+    # costs one host<->device transfer total instead of one per round.
+    # "numpy" / "device" pin one path.  Bit-identical covers either way
+    # (integer popcount, argmax ties -> lowest partition id), so this is
+    # purely a performance knob; without jax the numpy loop serves.
+    "span_round_backend": "auto",
+    # auto crossover for span_round_backend, in packed words (B * N * W)
+    # per bucket.  Calibrated by benchmarks/kernel_bench.py
+    # (span_round_calibration rows): the jitted loop amortizes its dispatch
+    # + compile-cache lookup over every greedy round, so it wins earlier
+    # than the per-round threshold; small refresh buckets (a few edges
+    # after an LMBR move) stay on numpy.
+    "span_round_threshold": 200_000,
     # LMBR Algorithm-5 peel backend.  "vector" (default) runs the batched
     # CSR peel (flat pin-attribution projection + scatter-add degree
-    # updates); "reference" the retained pure-Python oracle.  Bit-identical
-    # results (same subsets, same gains, same tie-breaks), so this is purely
-    # a performance knob — benchmarks/bench_lmbr.py times both.
+    # updates); "reference" the retained pure-Python oracle; "device" the
+    # jitted dense lockstep peel (repro.kernels.lockstep_peel, jnp path);
+    # "pallas" the Pallas lockstep-peel kernel (interpret mode on CPU).
+    # Device backends emit the free-space-independent peel TRAJECTORY in
+    # integer-exact f32 and the (gain, subset) selection happens on host in
+    # f64 — shared with the cache re-evaluation path — so results stay
+    # bit-identical (same subsets, same gains, same tie-breaks) and the
+    # flag is purely a performance knob; benchmarks/bench_lmbr.py and
+    # benchmarks/kernel_bench.py time the backends.  Device peels require
+    # integer-valued weights below 2^24 (asserted per workload) and fall
+    # back to "vector" otherwise, or when jax is unavailable.
     "lmbr_peel": "vector",
+    # LMBR gain-cache granularity.  "item" (default) keys cache validity on
+    # a global move tick: each cached (src, dest) entry stores the tick it
+    # was filled at, its shared-edge set + count, and its candidate pool;
+    # it stays valid while the pair's shared-edge count is unchanged (O(1)
+    # Gram-matrix lookup), no shared edge was re-stamped by a later cover
+    # recompute (per-edge tick), and no pooled item gained residency after
+    # the fill (per-item tick) — so untouched candidate pools survive moves
+    # that only graze their partitions, with a projection-fingerprint second
+    # level and re-evaluable cached peel trajectories behind it.
+    # "partition" restores the PR 5 cache (per-partition cov/mem epochs,
+    # <1% hit rate under the move loop).  Both are exactness-neutral; the
+    # bench's engine comparison pins "partition" for the baseline rows.
+    "lmbr_epochs": "item",
     # epoch-keyed (src, dest) -> (gain, items) memo in the LMBR move loop:
     # a pair is only re-peeled when a partition epoch it depends on moved
     # (cover/pin-attribution epoch of either side, membership epoch of the
@@ -121,13 +161,26 @@ def set_variant(spec: str):
             FLAGS["moe_cf"] = float(part[2:])
         elif part.startswith("spanth"):
             FLAGS["span_dispatch_threshold"] = int(part[len("spanth"):])
+        elif part.startswith("spanroundth"):
+            FLAGS["span_round_threshold"] = int(part[len("spanroundth"):])
+        elif part.startswith("spanround"):
+            backend = part[len("spanround"):]
+            if backend not in ("auto", "numpy", "device"):
+                raise ValueError(f"unknown span round backend {backend!r}")
+            FLAGS["span_round_backend"] = backend
         elif part.startswith("peelth"):
             FLAGS["lmbr_peel_threshold"] = int(part[len("peelth"):])
         elif part.startswith("peel"):
             backend = part[len("peel"):]
-            if backend not in ("vector", "reference", "auto"):
+            if backend not in ("vector", "reference", "auto", "device",
+                               "pallas"):
                 raise ValueError(f"unknown lmbr peel backend {backend!r}")
             FLAGS["lmbr_peel"] = backend
+        elif part.startswith("lmbrepoch"):
+            mode = part[len("lmbrepoch"):]
+            if mode not in ("item", "partition"):
+                raise ValueError(f"unknown lmbr epoch mode {mode!r}")
+            FLAGS["lmbr_epochs"] = mode
         elif part.startswith("lmbrcache"):
             FLAGS["lmbr_gain_cache"] = bool(int(part[len("lmbrcache"):]))
         elif part.startswith("routereps"):
@@ -172,7 +225,9 @@ def set_variant(spec: str):
 def reset():
     FLAGS.update(mla_decomp=False, accum_steps=1, sp=False, sp_attn=False,
                  moe_cf=None, span_backend="auto",
-                 span_dispatch_threshold=48_000, lmbr_peel="vector",
+                 span_dispatch_threshold=48_000, span_round_backend="auto",
+                 span_round_threshold=200_000, lmbr_peel="vector",
+                 lmbr_epochs="item",
                  lmbr_gain_cache=True, lmbr_peel_threshold=256,
                  router_microbatch=384, router_balance=False,
                  drift_window=512, drift_threshold=1.25,

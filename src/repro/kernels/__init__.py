@@ -6,11 +6,13 @@ ref.py (the pure-jnp oracle the tests assert against, in interpret mode).
 
 The paper's own contribution is control-plane (data placement) — these
 kernels are the substrate hot spots under the assigned shape grid: 32k
-prefill attention, 32k-500k decode attention, the Mamba2 SSD scan, and the
-span-gain popcount that batches the paper's greedy replica selection.
+prefill attention, 32k-500k decode attention, the Mamba2 SSD scan, the
+span-gain popcount that batches the paper's greedy replica selection, and
+the lockstep densest-subset peel behind the LMBR move engine.
 """
 
 from .flash_attention.ops import flash_attention  # noqa: F401
 from .decode_attention.ops import decode_attention  # noqa: F401
 from .ssd_scan.ops import ssd_scan  # noqa: F401
 from .span_gain.ops import span_gains  # noqa: F401
+from .lockstep_peel.ops import lockstep_peel  # noqa: F401

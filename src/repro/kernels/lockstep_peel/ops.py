@@ -1,0 +1,91 @@
+"""Backend dispatcher for the dense lockstep LMBR peel.
+
+numpy-in / numpy-out, mirroring ``span_gain.ops``: the LMBR move loop is a
+numpy control loop and treats one peel batch as a single op.  Backends:
+
+  * "numpy"     — float64 dense oracle (``ref.lockstep_peel_ref``).
+  * "jax"       — jitted f32 jnp lockstep (``ref.lockstep_peel_jnp``).
+  * "kernel"    — the Pallas kernel, compiled (TPU).
+  * "interpret" — the Pallas kernel in interpreter mode (CPU tests).
+  * "pallas"    — kernel on TPU, interpreter elsewhere.
+
+All backends emit the same free-space-independent trajectories
+(peel order, head-of-round pool weight and benefit); on the
+integer-valued-weight domain the LMBR dispatcher enforces, the f32 device
+arithmetic is exact and the trajectories are bit-identical to the f64
+oracle after the widening cast.
+
+Shape discipline: callers bucket batches into pow2 (U, K) classes so jit
+recompilation is bounded; the kernel path additionally pads K to the f32
+sublane multiple (8) and U to the lane width (128).  Padding is inert —
+zero incidence/weights never create degree, +inf degrees never win argmin,
+and rounds never exceed the unpadded nvalid.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .ref import lockstep_peel_ref
+
+_JNP_PEEL = None
+
+
+def _pad_axis(a: np.ndarray, axis: int, to: int) -> np.ndarray:
+    if a.shape[axis] == to:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, to - a.shape[axis])
+    return np.pad(a, pad)
+
+
+def lockstep_peel(
+    inc: np.ndarray,      # (G, K, U) 0/1 incidence, zero-padded
+    we: np.ndarray,       # (G, K) edge weights, zero-padded
+    nodew: np.ndarray,    # (G, U) item weights, zero-padded
+    nvalid: np.ndarray,   # (G,) valid item slots per pair
+    *,
+    force: str | None = None,
+):
+    """Peel trajectories (peel (G, U) int64, rtot/rben (G, U) float64)."""
+    if force == "numpy":
+        return lockstep_peel_ref(inc, we, nodew, nvalid)
+    import jax  # callers guard importability before dispatching here
+
+    impl = force or ("kernel" if jax.default_backend() == "tpu" else "jax")
+    if impl == "pallas":
+        impl = "kernel" if jax.default_backend() == "tpu" else "interpret"
+    G, K, U = inc.shape
+    inc32 = np.asarray(inc, dtype=np.float32)
+    we32 = np.asarray(we, dtype=np.float32)
+    nodew32 = np.asarray(nodew, dtype=np.float32)
+    nv32 = np.asarray(nvalid, dtype=np.int32)
+    if impl == "jax":
+        global _JNP_PEEL
+        if _JNP_PEEL is None:
+            from .ref import lockstep_peel_jnp
+
+            _JNP_PEEL = jax.jit(lockstep_peel_jnp)
+        peel, rtot, rben = _JNP_PEEL(inc32, we32, nodew32, nv32)
+        return (
+            np.asarray(peel).astype(np.int64),
+            np.asarray(rtot).astype(np.float64),
+            np.asarray(rben).astype(np.float64),
+        )
+
+    from .kernel import lockstep_peel as _kernel
+
+    k2 = -(-max(K, 1) // 8) * 8
+    u2 = -(-max(U, 1) // 128) * 128
+    inc32 = _pad_axis(_pad_axis(inc32, 1, k2), 2, u2)
+    we32 = _pad_axis(we32, 1, k2)
+    nodew32 = _pad_axis(nodew32, 1, u2)
+    peel, rtot, rben = _kernel(
+        inc32, we32, nodew32, nv32[:, None], interpret=(impl == "interpret")
+    )
+    # rounds never exceed nvalid <= U, so the U pad columns are all -1/0
+    return (
+        np.asarray(peel)[:, :U].astype(np.int64),
+        np.asarray(rtot)[:, :U].astype(np.float64),
+        np.asarray(rben)[:, :U].astype(np.float64),
+    )

@@ -104,3 +104,46 @@ def test_engine_per_bucket_dispatch_is_exact():
             flags.reset()
         for w, g in zip(want, got):
             np.testing.assert_array_equal(g, w, err_msg=str(setup))
+
+
+def test_whole_round_device_loop_is_exact():
+    """The jitted whole-round cover loop (``span_round_backend="device"``)
+    must reproduce the per-round host loop bit-exactly — same covers, same
+    pin_parts, same spans — and the auto threshold must route big buckets
+    to it (counter check) without changing results."""
+    from repro.core.hypergraph import Hypergraph
+    from repro.core.setcover import ENGINE_COUNTERS, batched_cover_csr
+
+    rng = np.random.default_rng(23)
+    num_items, n_parts = 140, 9
+    member = rng.random((n_parts, num_items)) < 0.3
+    member[0] |= ~member.any(axis=0)
+    edges = [
+        rng.choice(num_items, size=int(rng.integers(2, 90)), replace=False)
+        for _ in range(40)
+    ]
+    hg = Hypergraph.from_edges(edges, num_nodes=num_items)
+
+    def run():
+        cov = batched_cover_csr(hg.edge_ptr, hg.edge_nodes, member,
+                                with_pin_parts=True)
+        return cov.spans, cov.cover_ptr, cov.cover_parts, cov.pin_parts
+
+    flags.FLAGS["span_round_backend"] = "numpy"
+    try:
+        want = run()
+    finally:
+        flags.reset()
+    for setup in (
+        dict(span_round_backend="device"),
+        dict(span_round_backend="auto", span_round_threshold=0),
+    ):
+        flags.FLAGS.update(setup)
+        before = ENGINE_COUNTERS["device_buckets"]
+        try:
+            got = run()
+        finally:
+            flags.reset()
+        assert ENGINE_COUNTERS["device_buckets"] > before, setup
+        for w, g in zip(want, got):
+            np.testing.assert_array_equal(g, w, err_msg=str(setup))

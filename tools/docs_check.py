@@ -38,12 +38,15 @@ FLAG_PREFIXES = ("span_", "lmbr_", "mla_", "moe_", "accum_", "sp_",
 # flag-prefixed identifiers that are NOT flags (kernel / bench row names,
 # serving counters)
 NON_FLAGS = {"span_gain", "span_gain_calibration", "span_gain_ref",
-             "drift_fires"}
+             "span_gain_tile", "span_round_calibration", "drift_fires"}
 # backticked tokens that should parse as --variant specs
 VARIANT_RE = re.compile(
     r"^(baseline|mla_decomp|sp2?|accum\d+|cf[\d.]+|spanth\d+|peelth\d+|"
-    r"span(auto|numpy|jax|pallas)|peel(vector|reference|auto)|"
-    r"lmbrcache[01]|routerbal[01]|routermb\d+|routereps[\d.]+|"
+    r"span(auto|numpy|jax|pallas)|spanroundth\d+|"
+    r"spanround(auto|numpy|device)|"
+    r"peel(vector|reference|auto|device|pallas)|"
+    r"lmbrcache[01]|lmbrepoch(item|partition)|"
+    r"routerbal[01]|routermb\d+|routereps[\d.]+|"
     r"driftw\d+|driftth[\d.]+|shards\d+|scalew\d+|brepair\d+)"
     r"(\+.+)?$"
 )
