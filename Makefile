@@ -21,12 +21,12 @@ test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
 # cheap perf signal: span engine + LMBR move engine + online serving +
-# cluster-scale pipeline old-vs-new timings (BENCH_spans.json,
-# BENCH_lmbr.json, BENCH_online.json, BENCH_scale.json); the JSONs are
-# copied to the repo root as the committed baselines (results/ is
-# gitignored scratch)
+# cluster-scale pipeline + heterogeneous-cluster gates (BENCH_spans.json,
+# BENCH_lmbr.json, BENCH_online.json, BENCH_scale.json, BENCH_energy.json);
+# the JSONs are copied to the repo root as the committed baselines
+# (results/ is gitignored scratch)
 bench-smoke:
-	$(PY) -m benchmarks.run --only bench_spans,bench_lmbr,bench_online,bench_scale
+	$(PY) -m benchmarks.run --only bench_spans,bench_lmbr,bench_online,bench_scale,bench_energy
 	cp benchmarks/results/BENCH_*.json .
 
 # full quick benchmark suite (all paper figures, single seed)

@@ -1,0 +1,197 @@
+"""Heterogeneous cluster model benchmark: energy-aware placement, durability.
+
+Three sections, one BENCH_energy.json, three hard gates:
+
+  * identity — the web-mid tier fitted twice: the scalar-capacity call and
+    the same fit driven through `NodeProfile.homogeneous` (normalized
+    capacity + uniform access-cost vector).  The members must be
+    BIT-IDENTICAL (asserted) — the PR 7 refactor's contract that a
+    homogeneous profile reproduces every pre-profile number exactly.
+  * energy — the same tier refitted under ``placement_objective="energy"``:
+    replicas concentrate onto a capacity-descending active-row prefix so
+    idle machines can power down.  Gates: active machines drop by
+    >= ``MACHINE_GATE`` (30%) and avg_span stays <= ``SPAN_GATE`` (1.10x)
+    of the span-objective fit — the span-vs-active-machines Pareto point
+    the energy literature trades along.
+  * durability — the fig6 tier fitted with and without a durability
+    ceiling (``durability_eps``, homogeneous ``fail_prob=0.02`` so every
+    item needs >= 2 replicas).  Gates: no item's loss probability exceeds
+    the ceiling (``validate_durability``, asserted) and the constrained
+    fit's avg_span is <= ``DURAB_GATE`` (1.05x) the unconstrained fit —
+    durability copies are extra replicas, so co-location must not degrade.
+
+Emits benchmarks/results/BENCH_energy.json; see benchmarks/README.md for
+the row schema.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import flags
+from repro.core import (
+    EnergyModel,
+    NodeProfile,
+    PlacementService,
+    lmbr,
+    random_workload,
+    spans_for_workload,
+    validate_durability,
+    web_scale_workload,
+)
+from repro.core.cluster import _loss_probs
+
+from .common import emit_csv, save_json
+
+KEYS = [
+    "section", "tier", "mode", "items", "queries", "partitions", "seconds",
+    "avg_span", "span_ratio", "active_machines", "machine_cut_pct",
+    "cluster_power_w", "rf", "durability_eps", "p_loss_max",
+    "durability_copies", "identical",
+]
+
+MACHINE_GATE = 30.0   # energy objective powers down >= 30% of machines
+SPAN_GATE = 1.10      # ... at <= 1.10x the span-objective avg_span
+DURAB_GATE = 1.05     # durability ceiling costs <= 1.05x unconstrained span
+
+
+def _fit_row(hg, n, cap, moves, **extra):
+    t0 = time.perf_counter()
+    pl = lmbr(hg, n, cap, seed=0, max_moves=moves, **extra)
+    dt = time.perf_counter() - t0
+    return pl, dt
+
+
+# ------------------------------------------------- identity + energy (web)
+def _web_rows(quick: bool) -> list[dict]:
+    wl = web_scale_workload(num_items=2500, num_queries=10_000,
+                            num_clusters=48, cross_frac=0.05, seed=0)
+    hg = wl.hypergraph
+    n, cap, moves = 24, 210, 400
+    em = EnergyModel()
+    prof = NodeProfile.homogeneous(n, cap)
+
+    span_fit, t_span = _fit_row(hg, n, cap, moves)
+    span_avg = float(spans_for_workload(hg, span_fit).mean())
+    span_loads = span_fit.partition_weights()
+    span_active = int((span_loads > 0).sum())
+
+    # gate 1: the homogeneous-profile path is bit-identical
+    prof_fit, t_prof = _fit_row(hg, n, prof.capacity_arg(), moves,
+                                node_cost=prof.access_cost)
+    if not (span_fit.member == prof_fit.member).all():
+        raise AssertionError(
+            "homogeneous NodeProfile fit diverged from the scalar-capacity "
+            "fit on web-mid (bit-identity contract)"
+        )
+
+    # gate 2: the energy objective's Pareto point
+    flags.FLAGS["placement_objective"] = "energy"
+    try:
+        energy_fit, t_energy = _fit_row(hg, n, cap, moves)
+    finally:
+        flags.reset()
+    energy_fit.validate()
+    energy_avg = float(spans_for_workload(hg, energy_fit).mean())
+    energy_loads = energy_fit.partition_weights()
+    energy_active = int((energy_loads > 0).sum())
+    cut = 100.0 * (1 - energy_active / max(span_active, 1))
+    ratio = energy_avg / max(span_avg, 1e-12)
+    if cut < MACHINE_GATE:
+        raise AssertionError(
+            f"energy objective cut only {cut:.1f}% of active machines "
+            f"({span_active} -> {energy_active}) < {MACHINE_GATE}% gate"
+        )
+    if ratio > SPAN_GATE:
+        raise AssertionError(
+            f"energy objective avg_span {energy_avg:.4f} is {ratio:.3f}x "
+            f"the span objective ({span_avg:.4f}) > {SPAN_GATE} gate"
+        )
+
+    base = dict(tier=wl.name, items=hg.num_nodes, queries=hg.num_edges,
+                partitions=n)
+    return [
+        dict(base, section="identity", mode="scalar-capacity",
+             seconds=round(t_span, 2), avg_span=round(span_avg, 4),
+             active_machines=span_active,
+             cluster_power_w=round(em.cluster_power(span_loads, prof), 1),
+             rf=round(span_fit.replication_factor(), 3), identical=True),
+        dict(base, section="identity", mode="homogeneous-profile",
+             seconds=round(t_prof, 2), avg_span=round(span_avg, 4),
+             active_machines=span_active, identical=True),
+        dict(base, section="energy", mode="energy-objective",
+             seconds=round(t_energy, 2), avg_span=round(energy_avg, 4),
+             span_ratio=round(ratio, 4), active_machines=energy_active,
+             machine_cut_pct=round(cut, 1),
+             cluster_power_w=round(em.cluster_power(energy_loads, prof), 1),
+             rf=round(energy_fit.replication_factor(), 3)),
+    ]
+
+
+# ------------------------------------------------------------- durability
+def _durability_rows(quick: bool) -> list[dict]:
+    wl = random_workload(seed=0)  # the fig6 tier: 1000 items, 4000 queries
+    hg = wl.hypergraph
+    # generous capacity: LMBR's default move budget may fill ~50*N copies,
+    # and the durability pass needs free rows left for its extra replicas
+    n, cap, eps = 48, 100, 1e-3
+    prof = NodeProfile.homogeneous(n, cap, fail_prob=0.02)  # 0.02^2 <= eps
+    svc = PlacementService(seed=0)
+    queries = wl.queries
+
+    t0 = time.perf_counter()
+    free = svc.fit(queries, hg.num_nodes, n, cap)
+    t_free = time.perf_counter() - t0
+    free_avg = free.avg_span(queries)
+
+    t0 = time.perf_counter()
+    durable = svc.fit(queries, hg.num_nodes, n, profile=prof,
+                      durability_eps=eps)
+    t_dur = time.perf_counter() - t0
+    dur_avg = durable.avg_span(queries)
+
+    # gate 3a: the ceiling holds for every placed item
+    validate_durability(durable.as_placement(), prof, eps)
+    loss = _loss_probs(durable.member, prof.fail_prob)
+    placed = durable.member.any(axis=0)
+    p_loss_max = float(loss[placed].max()) if placed.any() else 0.0
+
+    # gate 3b: durability copies must not shred co-location
+    ratio = dur_avg / max(free_avg, 1e-12)
+    if ratio > DURAB_GATE:
+        raise AssertionError(
+            f"durability-constrained avg_span {dur_avg:.4f} is "
+            f"{ratio:.3f}x the unconstrained fit ({free_avg:.4f}) "
+            f"> {DURAB_GATE} gate"
+        )
+
+    base = dict(tier=wl.name, items=hg.num_nodes, queries=hg.num_edges,
+                partitions=n, section="durability")
+    return [
+        dict(base, mode="unconstrained", seconds=round(t_free, 2),
+             avg_span=round(free_avg, 4),
+             rf=round(free.as_placement().replication_factor(), 3)),
+        dict(base, mode=f"eps={eps:g}", seconds=round(t_dur, 2),
+             avg_span=round(dur_avg, 4), span_ratio=round(ratio, 4),
+             durability_eps=eps, p_loss_max=float(f"{p_loss_max:.2e}"),
+             durability_copies=int(durable.stats["durability_copies"]),
+             rf=round(durable.as_placement().replication_factor(), 3)),
+    ]
+
+
+def run(quick: bool = True) -> list[dict]:
+    flags.reset()
+    rows = []
+    rows += _web_rows(quick)
+    rows += _durability_rows(quick)
+    for r in rows:
+        print(f"  {r}", flush=True)
+    emit_csv("bench_energy", rows, KEYS)
+    save_json("BENCH_energy", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

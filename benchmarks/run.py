@@ -24,6 +24,7 @@ SECTIONS = [
     ("bench_lmbr", "LMBR move engine: reference peel vs vectorized + cache"),
     ("bench_online", "online serving: router qps, drift recovery, failover"),
     ("bench_scale", "cluster-scale: streaming ingestion, sharded parallel fits"),
+    ("bench_energy", "heterogeneous cluster: energy objective, durability"),
     ("placement_applications", "framework: MoE experts / shards / checkpoints"),
     ("kernel_bench", "Pallas kernels vs jnp oracles (CPU interpret)"),
     ("roofline_table", "roofline terms from dry-run artifacts"),

@@ -3,6 +3,8 @@ replica selection minimizing average query span (Kumar, Deshpande, Khuller).
 
 Layout:
   hypergraph  — workload model (queries = hyperedges over data items)
+  cluster     — heterogeneous node profiles (per-partition capacity /
+                failure probability / power / access cost) + durability
   setcover    — greedy replica selection / span computation
   hpa         — multilevel hypergraph partitioner (hMETIS stand-in)
   algorithms  — IHPA / DS / PRA / LMBR (+ Random, HPA baselines)
@@ -20,6 +22,14 @@ from .hypergraph import (  # noqa: F401
     Hypergraph,
     MutableHypergraph,
     canonicalize_csr,
+)
+from .cluster import (  # noqa: F401
+    NodeProfile,
+    capacity_vector,
+    ensure_durability,
+    min_replicas,
+    normalize_capacity,
+    validate_durability,
 )
 from .setcover import (  # noqa: F401
     Placement,

@@ -22,6 +22,7 @@ import numpy as np
 
 from .. import flags as _flags
 from . import hpa as hpa_mod
+from .cluster import capacity_vector, normalize_capacity
 from .hypergraph import Hypergraph
 from .setcover import (
     Placement,
@@ -38,11 +39,48 @@ __all__ = [
 ]
 
 
-def min_partitions(hg: Hypergraph, capacity: float) -> int:
+def min_partitions(hg: Hypergraph, capacity) -> int:
     """N_e = ceil(total item weight / C): the minimum number of partitions
     that can hold one copy of every item (exact up to the 1e-9 guard against
-    float round-up on integer-weight workloads)."""
-    return int(np.ceil(hg.total_node_weight() / capacity - 1e-9))
+    float round-up on integer-weight workloads).  For a heterogeneous
+    capacity vector, the count of largest-capacity partitions whose sum
+    holds the total."""
+    total = hg.total_node_weight()
+    if isinstance(capacity, np.ndarray) and capacity.ndim:
+        caps = np.sort(np.asarray(capacity, dtype=np.float64))[::-1]
+        cum = np.cumsum(caps)
+        k = int(np.searchsorted(cum, total - 1e-9)) + 1
+        return min(k, len(caps))
+    return int(np.ceil(total / capacity - 1e-9))
+
+
+def _is_cap_vec(capacity) -> bool:
+    return isinstance(capacity, np.ndarray) and capacity.ndim
+
+
+def _cap_at(capacity, p: int):
+    """Capacity of partition p: the scalar itself (unchanged object — the
+    bit-identity path) or the vector entry."""
+    return float(capacity[p]) if _is_cap_vec(capacity) else capacity
+
+
+def _cap_slice(capacity, lo: int, hi: int):
+    """Capacity restricted to partitions [lo, hi): scalar passes through;
+    uniform vector slices collapse back to the scalar path."""
+    return normalize_capacity(capacity[lo:hi]) if _is_cap_vec(capacity) \
+        else capacity
+
+
+def _base_partitions(hg: Hypergraph, capacity) -> int:
+    """Rows [0, ne) for the base no-replication fit.  Scalar capacities use
+    `min_partitions`; a heterogeneous vector takes the shortest PREFIX of
+    rows whose capacities hold one copy of everything, because the base
+    fits always fill rows in ascending id order."""
+    if _is_cap_vec(capacity):
+        cum = np.cumsum(np.asarray(capacity, dtype=np.float64))
+        ne = int(np.searchsorted(cum, hg.total_node_weight() - 1e-9)) + 1
+        return min(ne, len(cum))
+    return min_partitions(hg, capacity)
 
 
 def _assign_to_placement(
@@ -75,8 +113,9 @@ def random_placement(
     # replicate randomly into leftover space
     order = rng.permutation(hg.num_nodes)
     for p in range(n):
+        cap_p = _cap_at(capacity, p)
         for v in order:
-            if loads[p] + hg.node_weights[v] > capacity:
+            if loads[p] + hg.node_weights[v] > cap_p:
                 continue
             if pl.member[p, v]:
                 continue
@@ -92,8 +131,10 @@ def hpa_placement(
 
     This is the paper's no-replication baseline: its span does not improve as
     partitions are added (fig. 6a's flat line)."""
-    ne = min_partitions(hg, capacity)
-    assign = hpa_mod.partition(hg, ne, capacity, seed=seed, nruns=nruns)
+    ne = _base_partitions(hg, capacity)
+    assign = hpa_mod.partition(
+        hg, ne, _cap_slice(capacity, 0, ne), seed=seed, nruns=nruns
+    )
     return _assign_to_placement(hg, assign, n, capacity)
 
 
@@ -117,8 +158,10 @@ def ihpa(
     ties -> lowest partition id); when the residual must shrink (§4.2),
     lowest-span hyperedges are dropped in stable ascending-span order, so
     repeated runs with one seed produce identical placements."""
-    ne = min_partitions(hg, capacity)
-    assign = hpa_mod.partition(hg, ne, capacity, seed=seed, nruns=nruns)
+    ne = _base_partitions(hg, capacity)
+    assign = hpa_mod.partition(
+        hg, ne, _cap_slice(capacity, 0, ne), seed=seed, nruns=nruns
+    )
     pl = _assign_to_placement(hg, assign, n, capacity)
     spans = SpanMaintainer(hg, pl)  # incremental: only touched edges recompute
     used = ne
@@ -131,7 +174,8 @@ def ihpa(
         resid = hg.subhypergraph_edges(edge_ids)
         resid, old_ids = resid.relabel()
         rem_parts = n - used
-        rem_cap = rem_parts * capacity
+        rem_cap = (float(capacity[used:n].sum()) if _is_cap_vec(capacity)
+                   else rem_parts * capacity)
         if resid.total_node_weight() > rem_cap:
             # §4.2 text: drop lowest-span hyperedges one at a time (these gain
             # least from replication) until the residual fits
@@ -158,10 +202,18 @@ def ihpa(
             resid = sub
             if resid.num_edges == 0 or resid.num_nodes == 0:
                 break
-        n_new = min(rem_parts,
-                    max(1, int(np.ceil(resid.total_node_weight() / capacity))))
+        if _is_cap_vec(capacity):
+            # shortest prefix of the spare rows that holds the residual
+            cum = np.cumsum(capacity[used:n])
+            n_new = min(rem_parts, max(1, int(np.searchsorted(
+                cum, resid.total_node_weight() - 1e-9)) + 1))
+        else:
+            n_new = min(rem_parts,
+                        max(1, int(np.ceil(resid.total_node_weight()
+                                           / capacity))))
         sub_assign = hpa_mod.partition(
-            resid, n_new, capacity, seed=seed + round_, nruns=nruns
+            resid, n_new, _cap_slice(capacity, used, used + n_new),
+            seed=seed + round_, nruns=nruns
         )
         pl.member[used + sub_assign, old_ids] = True
         spans.notify_items(old_ids)
@@ -180,8 +232,10 @@ def ds(
     lowest-degree node first, ties -> lowest node id (heap order), and
     residual spans come from the batched engine — repeated runs with one
     seed are bit-identical."""
-    ne = min_partitions(hg, capacity)
-    assign = hpa_mod.partition(hg, ne, capacity, seed=seed, nruns=nruns)
+    ne = _base_partitions(hg, capacity)
+    assign = hpa_mod.partition(
+        hg, ne, _cap_slice(capacity, 0, ne), seed=seed, nruns=nruns
+    )
     pl = _assign_to_placement(hg, assign, n, capacity)
     spans = SpanMaintainer(hg, pl)
     used = ne
@@ -190,7 +244,7 @@ def ds(
         if len(edge_ids) == 0:
             break
         resid = hg.subhypergraph_edges(edge_ids)
-        dense_nodes = resid.k_densest_nodes(capacity)
+        dense_nodes = resid.k_densest_nodes(_cap_at(capacity, used))
         if len(dense_nodes) == 0:
             break
         pl.member[used, dense_nodes] = True
@@ -228,9 +282,11 @@ def pra(
     descending-score order (ties -> lowest item id via stable argsort); the
     hitting-set greedy picks the most frequent element, ties -> LOWEST
     element id (`max` on (count, -id))."""
-    ne = min_partitions(hg, capacity)
-    assign = hpa_mod.partition(hg, ne, capacity, seed=seed, nruns=nruns)
-    pl0 = _assign_to_placement(hg, assign, ne, capacity)
+    ne = _base_partitions(hg, capacity)
+    assign = hpa_mod.partition(
+        hg, ne, _cap_slice(capacity, 0, ne), seed=seed, nruns=nruns
+    )
+    pl0 = _assign_to_placement(hg, assign, ne, _cap_slice(capacity, 0, ne))
 
     # score_v = #edges where v is the only member of its partition (line 4):
     # a pin is "solo" iff its (edge, partition) pin-count is exactly 1.
@@ -251,7 +307,8 @@ def pra(
             minlength=hg.num_nodes,
         )
 
-    budget = n * capacity - hg.total_node_weight()  # spare replication room
+    budget = (float(capacity.sum()) if _is_cap_vec(capacity)
+              else n * capacity) - hg.total_node_weight()  # spare room
     mutable = hg.copy_mutable()
     origins = list(range(hg.num_nodes))  # origins[new_id] = original item id
     node_ptr, node_edges = hg.incidence()
@@ -416,7 +473,7 @@ class _LMBRState:
         """Capacity headroom of p, tracked incrementally across moves
         (exact for integer item weights; for float weights it may differ
         from ``Placement.free_space`` in the last ulp — summation order)."""
-        return self.pl.capacity - float(self._loads[p])
+        return self.pl.cap_of(p) - float(self._loads[p])
 
     def shared_edges(self, src: int, dest: int) -> list[int]:
         """Edges accessing both partitions, ascending edge id."""
@@ -1235,6 +1292,24 @@ def _lmbr_peel_flat(state: _LMBRState, proj: list[tuple],
     return out
 
 
+def _energy_active_rows(hg: Hypergraph, n: int, capacity,
+                        slack: float = 1.25) -> np.ndarray:
+    """Active-partition mask for ``placement_objective="energy"``: the
+    smallest capacity-descending prefix of rows (ties -> lowest id) whose
+    total capacity holds ``slack``x the item weight.  Everything outside
+    the mask stays empty — those machines can be powered down — while the
+    in-mask slack is the replication budget the move engine spends."""
+    caps = capacity_vector(capacity, n)
+    order = np.lexsort((np.arange(n), -caps))
+    cum = np.cumsum(caps[order])
+    need = min(hg.total_node_weight() * slack, float(cum[-1]))
+    k = int(np.searchsorted(cum, need - 1e-9)) + 1
+    k = min(max(k, 1), n)
+    mask = np.zeros(n, dtype=bool)
+    mask[order[:k]] = True
+    return mask
+
+
 def lmbr(
     hg: Hypergraph,
     n: int,
@@ -1244,6 +1319,7 @@ def lmbr(
     max_moves: int | None = None,
     initial: Placement | None = None,
     dest_mask: np.ndarray | None = None,
+    node_cost: np.ndarray | None = None,
     **_,
 ) -> Placement:
     """Improved LMBR (Algorithm 4 + Algorithm 5).
@@ -1259,6 +1335,18 @@ def lmbr(
     online drift refits keep adapting during an outage (down rows masked)
     without ever copying data onto dead partitions.
 
+    ``flags.placement_objective="energy"`` reuses the same plumbing on a
+    cold start: the balanced start and the dest mask are restricted to a
+    capacity-descending active-row prefix (`_energy_active_rows`), so the
+    remaining partitions finish the fit empty and can be powered down.
+
+    `node_cost` (optional, (n,) per-partition access cost, e.g.
+    ``NodeProfile.access_cost``) with ``flags.node_cost_weight`` > 0
+    charges each candidate move ``weight * node_cost[dest]`` against its
+    gain before the accept test, steering replicas toward cheap nodes.
+    The default (weight 0 or no vector) leaves every gain untouched —
+    bit-identical to the unpenalized engine.
+
     Determinism contract: moves are applied in descending-gain order from a
     heap whose entries tie-break on (src, dest, version); candidate subsets
     come from the Algorithm 5 peel (ascending edge id in the projection,
@@ -1267,18 +1355,49 @@ def lmbr(
     gain-cache setting (``flags.FLAGS["lmbr_gain_cache"]``).  The fitted
     ``Placement`` carries the move-engine counters in ``.stats`` (moves,
     gain_calls, gain_cache_hits, peel backend)."""
+    energy_mask: np.ndarray | None = None
     if initial is not None:
         pl = Placement(
             initial.member.copy(), capacity, hg.node_weights
         )
+    elif _flags.FLAGS.get("placement_objective", "span") == "energy":
+        # energy objective: fit into the active-row prefix only; idle rows
+        # never receive copies (masked below), so they finish empty
+        energy_mask = _energy_active_rows(hg, n, capacity)
+        active = np.flatnonzero(energy_mask)
+        k = len(active)
+        caps_a = capacity_vector(capacity, n)[active]
+        # capacity-proportional balance targets: each active row's share of
+        # the load follows its share of the active capacity, so the clamped
+        # sum always covers the total weight (flat per-row targets starve
+        # rows smaller than the average)
+        bal = (
+            caps_a / float(caps_a.sum()) * hg.total_node_weight() * 1.1
+            + float(hg.node_weights.max())
+        )
+        bal_cap = normalize_capacity(np.minimum(caps_a, bal))
+        sub_assign = hpa_mod.partition(hg, k, bal_cap, seed=seed, nruns=nruns)
+        pl = _assign_to_placement(hg, active[sub_assign], n, capacity)
     else:
         # Algorithm 4 line 1: balanced N-way start (hMETIS's UBfactor formula
         # allows only ~(C*N-total)/total slack, i.e. near-balance); the spare
         # capacity in every partition is the replication budget for the moves
-        bal_cap = min(
-            capacity,
-            hg.total_node_weight() / n * 1.1 + float(hg.node_weights.max()),
-        )
+        if _is_cap_vec(capacity):
+            # heterogeneous rows: balance targets proportional to each
+            # row's capacity share (a flat per-row target would starve the
+            # sub-average rows and can make the start infeasible)
+            bal_cap = normalize_capacity(np.minimum(
+                capacity,
+                capacity / float(capacity.sum())
+                * hg.total_node_weight() * 1.1
+                + float(hg.node_weights.max()),
+            ))
+        else:
+            bal_cap = min(
+                capacity,
+                hg.total_node_weight() / n * 1.1
+                + float(hg.node_weights.max()),
+            )
         assign = hpa_mod.partition(hg, n, bal_cap, seed=seed, nruns=nruns)
         pl = _assign_to_placement(hg, assign, n, capacity)
     eng0 = engine_counters()
@@ -1291,10 +1410,22 @@ def lmbr(
         dest_ok = np.asarray(dest_mask, dtype=bool)
         if dest_ok.shape != (n,):
             raise ValueError(f"dest_mask must be ({n},) bool")
+    if energy_mask is not None:
+        dest_ok = dest_ok & energy_mask
+    # optional access-cost gain penalty (off by default: cost_pen is None
+    # and every gain flows through unmodified — bit-identical)
+    ncw = float(_flags.FLAGS.get("node_cost_weight", 0.0))
+    cost_pen = (
+        ncw * np.asarray(node_cost, dtype=np.float64)
+        if ncw > 0 and node_cost is not None else None
+    )
 
     # priority queue of (-gain, src, dest, version)
     version = np.zeros((n, n), dtype=np.int64)
     pq: list[tuple[float, int, int, int]] = []
+
+    def _penalized(gain: float, d: int) -> float:
+        return gain - float(cost_pen[d]) if cost_pen is not None else gain
 
     def push_many(pairlist: list[tuple[int, int]]):
         # one batched (epoch-cached) gain evaluation for the whole refresh
@@ -1303,6 +1434,7 @@ def lmbr(
         results = state.max_gain_many(pairlist)
         for s, d in pairlist:
             gain, items = results[(s, d)]
+            gain = _penalized(gain, d)
             version[s, d] += 1
             if gain > 0 and items is not None:
                 heapq.heappush(pq, (-gain, s, d, int(version[s, d])))
@@ -1316,6 +1448,7 @@ def lmbr(
         if ver != version[src, dest]:
             continue  # stale entry
         gain, items = state.max_gain(src, dest)  # re-verify vs live state
+        gain = _penalized(gain, dest)
         if items is None or gain <= 0:
             continue
         w = hg.node_weights[items].sum()

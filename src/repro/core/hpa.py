@@ -31,6 +31,14 @@ __all__ = ["partition", "connectivity_cost", "ubfactor", "fresh_partition_cache"
 _MAX_EDGE_FOR_MATCH = 64  # skip huge hyperedges during matching (hMETIS-like)
 
 
+def _cap_at(capacity, p):
+    """Capacity of part p: the scalar itself (unchanged object — the
+    bit-identity path for homogeneous fits) or the vector entry."""
+    if isinstance(capacity, np.ndarray) and capacity.ndim:
+        return float(capacity[p])
+    return capacity
+
+
 def ubfactor(capacity: float, num_partitions: int, total_items: float) -> float:
     """The paper's UBfactor formula (§4.1) — retained for interface parity.
 
@@ -310,7 +318,8 @@ def _refine(
             best_u, best_total = -1, 1e-12
             for u in cand:
                 wu = hg.node_weights[u]
-                if loads[a] - wv + wu > capacity or loads[b] + wv - wu > capacity:
+                if (loads[a] - wv + wu > _cap_at(capacity, a)
+                        or loads[b] + wv - wu > _cap_at(capacity, b)):
                     continue
                 eu = node_edges[node_ptr[u] : node_ptr[u + 1]]
                 if len(eu) == 0:
@@ -354,7 +363,7 @@ def _fixup_capacity(
     node_ptr, node_edges = hg.incidence()
     for p in range(k):
         guard = 0
-        while loads[p] > capacity + 1e-9 and guard < hg.num_nodes:
+        while loads[p] > _cap_at(capacity, p) + 1e-9 and guard < hg.num_nodes:
             guard += 1
             members = np.flatnonzero(assign == p)
             # evict the node with the fewest incident pins in p (lightest on ties)
@@ -382,8 +391,9 @@ def _fixup_capacity(
                 for u in np.flatnonzero(assign == q):
                     wu = hg.node_weights[u]
                     if (wu < wv
-                            and loads[q] - wu + wv <= capacity + 1e-9
-                            and loads[p] - wv + wu <= capacity + 1e-9 * 0 + loads[p]):
+                            and loads[q] - wu + wv <= _cap_at(capacity, q) + 1e-9
+                            and loads[p] - wv + wu
+                            <= _cap_at(capacity, p) + 1e-9 * 0 + loads[p]):
                         assign[best_v], assign[int(u)] = q, p
                         loads[p] += wu - wv
                         loads[q] += wv - wu
@@ -425,8 +435,13 @@ def _partition_key(hg, k, capacity, seed, nruns, passes, coarsen_to) -> str:
     h = hashlib.sha1()
     for arr in (hg.edge_ptr, hg.edge_nodes, hg.node_weights, hg.edge_weights):
         h.update(np.ascontiguousarray(arr).tobytes())
+    if isinstance(capacity, np.ndarray) and capacity.ndim:
+        h.update(np.ascontiguousarray(capacity, dtype=np.float64).tobytes())
+        cap_repr = "het"
+    else:
+        cap_repr = float(capacity)
     h.update(
-        repr((k, float(capacity), seed, nruns, passes, coarsen_to)).encode()
+        repr((k, cap_repr, seed, nruns, passes, coarsen_to)).encode()
     )
     return h.hexdigest()
 
@@ -452,7 +467,13 @@ def partition(
     n = hg.num_nodes
     if capacity is None:
         capacity = hg.total_node_weight() / k * 1.05 + hg.node_weights.max()
-    if hg.total_node_weight() > k * capacity + 1e-9:
+    het = isinstance(capacity, np.ndarray) and capacity.ndim
+    if het and len(capacity) != k:
+        raise ValueError(
+            f"capacity vector has {len(capacity)} entries, want k={k}"
+        )
+    total_cap = float(capacity.sum()) if het else k * capacity
+    if hg.total_node_weight() > total_cap + 1e-9:
         raise ValueError(
             f"items (w={hg.total_node_weight()}) cannot fit {k} x {capacity}"
         )
@@ -473,8 +494,12 @@ def partition(
         # ---- coarsening phase
         levels: list[tuple[Hypergraph, np.ndarray]] = []
         cur = hg
+        # heterogeneous capacities coarsen against the tightest part: no
+        # cluster may exceed the smallest capacity (same semantics as the
+        # scalar bound); the scalar object passes through untouched
+        coarse_cap = float(np.min(capacity)) if het else capacity
         while cur.num_nodes > coarsen_to:
-            coarse, cmap = _coarsen_once(cur, capacity, rng)
+            coarse, cmap = _coarsen_once(cur, coarse_cap, rng)
             if coarse.num_nodes >= 0.95 * cur.num_nodes:
                 break  # diminishing returns
             levels.append((cur, cmap))

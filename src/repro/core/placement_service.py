@@ -30,7 +30,14 @@ from typing import Sequence
 
 import numpy as np
 
+from .. import flags as _flags
 from .algorithms import ALGORITHMS, lmbr, min_partitions
+from .cluster import (
+    NodeProfile,
+    ensure_durability,
+    normalize_capacity,
+    validate_durability,
+)
 from .hypergraph import Hypergraph
 from .setcover import (
     Placement,
@@ -46,7 +53,7 @@ __all__ = ["PlacementPlan", "HierarchicalPlan", "PlacementService"]
 @dataclasses.dataclass
 class PlacementPlan:
     member: np.ndarray  # (N, V) bool
-    capacity: float
+    capacity: "float | np.ndarray"  # scalar, or (N,) per-partition vector
     node_weights: np.ndarray
     algorithm: str
     # optional fitter diagnostics (the sharded pipeline's stage stats, the
@@ -88,9 +95,16 @@ class PlacementPlan:
 
     # --------------------------------------------------------- serialization
     def to_json(self) -> str:
+        cap = self.capacity
         return json.dumps(
             dict(
-                capacity=self.capacity,
+                # heterogeneous vectors serialize as a per-partition list;
+                # scalars stay a bare float (the historical wire format)
+                capacity=(
+                    np.asarray(cap, dtype=np.float64).tolist()
+                    if isinstance(cap, np.ndarray) and cap.ndim
+                    else float(cap)
+                ),
                 algorithm=self.algorithm,
                 node_weights=self.node_weights.tolist(),
                 partitions=[
@@ -107,9 +121,13 @@ class PlacementPlan:
         member = np.zeros((len(d["partitions"]), d["num_items"]), dtype=bool)
         for p, items in enumerate(d["partitions"]):
             member[p, np.asarray(items, dtype=np.int64)] = True
+        cap = d["capacity"]
         return PlacementPlan(
             member,
-            float(d["capacity"]),
+            # lists restore the per-partition vector (uniform ones collapse
+            # back to the scalar path); bare numbers stay floats
+            normalize_capacity(np.asarray(cap, dtype=np.float64))
+            if isinstance(cap, list) else float(cap),
             np.asarray(d["node_weights"], dtype=np.float64),
             d["algorithm"],
         )
@@ -160,23 +178,79 @@ class PlacementService:
         self.seed = seed
         self.nruns = nruns
 
+    # ------------------------------------------------------------- profiles
+    @staticmethod
+    def _resolve_profile(profile, num_partitions, capacity):
+        """(capacity, profile) from the scalar-or-profile surface.  A
+        profile supplies (and must agree on) the partition count; its
+        capacity normalizes to the scalar float when uniform, so a
+        homogeneous profile drives byte-for-byte the scalar code paths."""
+        if profile is None:
+            return capacity, None
+        if profile.num_partitions != num_partitions:
+            raise ValueError(
+                f"profile has {profile.num_partitions} partitions, "
+                f"want {num_partitions}"
+            )
+        if capacity is not None and not np.array_equal(
+            np.asarray(capacity, dtype=np.float64),
+            np.asarray(normalize_capacity(profile.capacity)),
+        ):
+            raise ValueError("capacity and profile.capacity disagree")
+        return profile.capacity_arg(), profile
+
+    def _apply_durability(self, pl, profile, num_partitions, capacity,
+                          durability_eps):
+        """Post-fit durability pass (``flags.durability_eps`` or the
+        explicit argument): greedily copy under-replicated items onto
+        low-fail-prob partitions until every item meets the ceiling, then
+        re-validate both capacity and the ceiling."""
+        eps = (float(_flags.FLAGS.get("durability_eps", 0.0))
+               if durability_eps is None else float(durability_eps))
+        if eps <= 0:
+            return
+        prof = profile if profile is not None else NodeProfile.homogeneous(
+            num_partitions, float(np.min(np.asarray(capacity)))
+        )
+        touched = ensure_durability(pl, prof, eps)
+        pl.validate()
+        validate_durability(pl, prof, eps)
+        if pl.stats is not None:
+            pl.stats["durability_copies"] = int(len(touched))
+
     # ------------------------------------------------------------------ fit
     def fit(
         self,
         queries: Sequence[Sequence[int]],
         num_items: int,
         num_partitions: int,
-        capacity: float,
+        capacity: float | None = None,
         node_weights: np.ndarray | None = None,
         query_weights: np.ndarray | None = None,
+        profile: NodeProfile | None = None,
+        durability_eps: float | None = None,
     ) -> PlacementPlan:
+        capacity, profile = self._resolve_profile(
+            profile, num_partitions, capacity
+        )
+        if capacity is None:
+            raise ValueError("pass capacity or a NodeProfile")
         hg = Hypergraph.from_edges(
             queries, num_nodes=num_items,
             node_weights=node_weights, edge_weights=query_weights,
         )
         fn = ALGORITHMS[self.algorithm]
-        pl = fn(hg, num_partitions, capacity, seed=self.seed, nruns=self.nruns)
+        algo_kwargs = {}
+        if profile is not None:
+            # the LMBR engine's optional access-cost penalty; other
+            # algorithms swallow the kwarg
+            algo_kwargs["node_cost"] = profile.access_cost
+        pl = fn(hg, num_partitions, capacity, seed=self.seed,
+                nruns=self.nruns, **algo_kwargs)
         pl.validate()
+        self._apply_durability(
+            pl, profile, num_partitions, capacity, durability_eps
+        )
         return PlacementPlan(
             pl.member, capacity, hg.node_weights, self.algorithm,
             stats=pl.stats,
@@ -187,13 +261,15 @@ class PlacementService:
         self,
         workload,
         num_partitions: int,
-        capacity: float,
+        capacity: float | None = None,
         num_items: int | None = None,
         node_weights: np.ndarray | None = None,
         query_weights: np.ndarray | None = None,
         num_shards: int | None = None,
         workers: int | None = None,
         boundary_repair: int | None = None,
+        profile: NodeProfile | None = None,
+        durability_eps: float | None = None,
         **algo_kwargs,
     ) -> PlacementPlan:
         """Cluster-scale fit through the `repro.scale` pipeline.
@@ -209,6 +285,11 @@ class PlacementService:
         boundary_cost, per-stage seconds, ...)."""
         from ..scale import fit_sharded_placement
 
+        capacity, profile = self._resolve_profile(
+            profile, num_partitions, capacity
+        )
+        if capacity is None:
+            raise ValueError("pass capacity or a NodeProfile")
         if isinstance(workload, Hypergraph):
             hg = workload
             if node_weights is not None or query_weights is not None:
@@ -226,9 +307,12 @@ class PlacementService:
             workers=workers, boundary_repair=boundary_repair, **algo_kwargs,
         )
         res.placement.validate()
+        self._apply_durability(
+            res.placement, profile, num_partitions, capacity, durability_eps
+        )
         return PlacementPlan(
-            res.placement.member, float(capacity), hg.node_weights,
-            f"{self.algorithm}+sharded", stats=res.stats,
+            res.placement.member, normalize_capacity(capacity),
+            hg.node_weights, f"{self.algorithm}+sharded", stats=res.stats,
         )
 
     # -------------------------------------------------------------- 2-level
@@ -288,13 +372,15 @@ class PlacementService:
         queries: Sequence[Sequence[int]],
         max_moves: int = 64,
         dest_mask: np.ndarray | None = None,
+        profile: NodeProfile | None = None,
     ) -> PlacementPlan:
         """Incremental adaptation to workload drift: LMBR warm-started from
         the current placement; only copies items into free space (existing
         replicas never move, so the delta is cheap to apply online).
         ``dest_mask`` ((N,) bool) excludes partitions from receiving copies
         — the outage path: refitting on a failure-masked layout must never
-        target a down partition."""
+        target a down partition.  A ``profile`` supplies the access-cost
+        vector for the engine's optional ``node_cost_weight`` penalty."""
         hg = Hypergraph.from_edges(
             queries, num_nodes=plan.member.shape[1],
             node_weights=plan.node_weights,
@@ -303,6 +389,7 @@ class PlacementService:
             hg, plan.num_partitions, plan.capacity,
             seed=self.seed, initial=plan.as_placement(), max_moves=max_moves,
             dest_mask=dest_mask,
+            node_cost=profile.access_cost if profile is not None else None,
         )
         pl.validate()
         return PlacementPlan(

@@ -45,6 +45,7 @@ import dataclasses
 import numpy as np
 
 from .. import flags as _flags
+from .cluster import normalize_capacity
 
 __all__ = [
     "Placement",
@@ -82,21 +83,28 @@ class Placement:
 
     ``stats`` is an optional fitting-diagnostics dict attached by the
     producing algorithm (e.g. LMBR's move-engine counters); it never
-    influences placement semantics."""
+    influences placement semantics.
+
+    ``capacity`` is either the classic scalar (every partition holds the
+    same weight) or an (N,) per-partition vector for heterogeneous
+    clusters (repro.core.cluster.NodeProfile).  Uniform vectors should be
+    collapsed to the scalar via ``normalize_capacity`` before construction
+    — `empty` does so — which keeps homogeneous profiles bit-identical to
+    the scalar model."""
 
     member: np.ndarray  # (N, V) bool
-    capacity: float
+    capacity: "float | np.ndarray"  # scalar, or (N,) per-partition vector
     node_weights: np.ndarray  # (V,)
     stats: dict | None = None
 
     @staticmethod
-    def empty(num_partitions: int, num_items: int, capacity: float,
+    def empty(num_partitions: int, num_items: int, capacity,
               node_weights: np.ndarray | None = None) -> "Placement":
         if node_weights is None:
             node_weights = np.ones(num_items, dtype=np.float64)
         return Placement(
             np.zeros((num_partitions, num_items), dtype=bool),
-            float(capacity),
+            normalize_capacity(capacity),
             np.asarray(node_weights, dtype=np.float64),
         )
 
@@ -118,8 +126,23 @@ class Placement:
     def partition_weights(self) -> np.ndarray:
         return self.member @ self.node_weights
 
+    def cap_of(self, p: int) -> float:
+        """Capacity of partition p (scalar capacities apply to every row)."""
+        cap = self.capacity
+        if isinstance(cap, np.ndarray) and cap.ndim:
+            return float(cap[p])
+        return float(cap)
+
+    @property
+    def capacity_vec(self) -> np.ndarray:
+        """(N,) per-partition capacity (scalar capacity broadcast)."""
+        cap = self.capacity
+        if isinstance(cap, np.ndarray) and cap.ndim:
+            return cap
+        return np.full(self.num_partitions, float(cap))
+
     def free_space(self, p: int) -> float:
-        return self.capacity - self.partition_weight(p)
+        return self.cap_of(p) - self.partition_weight(p)
 
     def replication_factor(self) -> float:
         placed = self.member.sum(axis=0)
@@ -133,18 +156,27 @@ class Placement:
     def add(self, p: int, items) -> None:
         self.member[p, np.asarray(items, dtype=np.int64)] = True
 
-    def add_partition(self) -> int:
+    def add_partition(self, capacity: float | None = None) -> int:
         self.member = np.vstack(
             [self.member, np.zeros((1, self.num_items), dtype=bool)]
         )
+        cap = self.capacity
+        if isinstance(cap, np.ndarray) and cap.ndim:
+            new_cap = float(np.min(cap)) if capacity is None else float(capacity)
+            self.capacity = np.append(cap, new_cap)
+        elif capacity is not None and float(capacity) != float(cap):
+            self.capacity = np.append(
+                np.full(self.num_partitions - 1, float(cap)), float(capacity)
+            )
         return self.num_partitions - 1
 
     def validate(self, tol: float = 1e-9) -> None:
         w = self.partition_weights()
         if (w > self.capacity + tol).any():
-            bad = int(np.argmax(w))
+            cap = self.capacity_vec
+            bad = int(np.argmax(w - cap))
             raise ValueError(
-                f"partition {bad} over capacity: {w[bad]:.1f} > {self.capacity}"
+                f"partition {bad} over capacity: {w[bad]:.1f} > {cap[bad]}"
             )
         placed = self.member.any(axis=0)
         # items that appear in no partition are only legal if they are phantom

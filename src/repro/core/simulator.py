@@ -31,6 +31,9 @@ from typing import Callable
 import numpy as np
 
 from . import hpa as hpa_mod
+from .cluster import (
+    DEFAULT_POWER_ACTIVE, DEFAULT_POWER_IDLE, NodeProfile, normalize_capacity,
+)
 from .hypergraph import Hypergraph
 from .setcover import Placement, batched_cover_csr
 
@@ -50,6 +53,24 @@ class EnergyModel:
             + self.e_net_per_gb * shipped_gb
         )
 
+    def cluster_power(self, loads: np.ndarray,
+                      profile: NodeProfile | None = None) -> float:
+        """Steady-state cluster draw (W): a loaded partition bills its
+        active power, an empty one its idle (powered-down) draw.  With a
+        `NodeProfile` the draw is per-node; otherwise the homogeneous
+        defaults apply — this is the machine-count half of the
+        span-vs-active-machines Pareto the energy objective targets."""
+        active = np.asarray(loads, dtype=np.float64) > 0
+        if profile is not None:
+            return float(
+                np.where(active, profile.power_active,
+                         profile.power_idle).sum()
+            )
+        return float(
+            active.sum() * DEFAULT_POWER_ACTIVE
+            + (~active).sum() * DEFAULT_POWER_IDLE
+        )
+
 
 @dataclasses.dataclass
 class SimulationResult:
@@ -63,6 +84,8 @@ class SimulationResult:
     replication_factor: float
     placement_stats: dict | None = None  # fitter diagnostics (Placement.stats)
     online_stats: dict | None = None     # serving counters (run_online)
+    active_machines: int = 0             # partitions holding any data
+    cluster_power_w: float = 0.0         # steady-state draw (EnergyModel)
 
     @property
     def avg_span(self) -> float:
@@ -88,6 +111,8 @@ class SimulationResult:
             rf=round(self.replication_factor, 3),
             placement_s=round(self.placement_seconds, 3),
             load_imbalance=round(self.load_imbalance, 3),
+            active_machines=int(self.active_machines),
+            cluster_power_w=round(self.cluster_power_w, 1),
         )
         if self.placement_stats:
             # fitter-side counters (e.g. LMBR moves / gain-cache hit rate)
@@ -128,12 +153,20 @@ class Simulator:
     def __init__(
         self,
         num_partitions: int,
-        capacity: float,
+        capacity: "float | np.ndarray | None" = None,
         energy_model: EnergyModel | None = None,
         item_gb: float = 1.0,
+        profile: NodeProfile | None = None,
     ):
         self.n = num_partitions
+        if capacity is None:
+            if profile is None:
+                raise ValueError("pass capacity or a NodeProfile")
+            capacity = profile.capacity_arg()
+        elif isinstance(capacity, np.ndarray):
+            capacity = normalize_capacity(capacity)
         self.capacity = capacity
+        self.profile = profile
         self.energy = energy_model or EnergyModel()
         self.item_gb = item_gb  # GB per unit of item weight
 
@@ -175,16 +208,19 @@ class Simulator:
         total_energy = float(
             self.energy.query_energy(scanned, spans, shipped).sum()
         )
+        loads = pl.partition_weights()
         return SimulationResult(
             algorithm=name or getattr(algorithm, "__name__", "custom"),
             spans=spans,
-            loads=pl.partition_weights(),
+            loads=loads,
             access_load=access_load,
             energy_joules=total_energy,
             shipped_gb=total_shipped,
             placement_seconds=dt,
             replication_factor=pl.replication_factor(),
             placement_stats=pl.stats,
+            active_machines=int((loads > 0).sum()),
+            cluster_power_w=self.energy.cluster_power(loads, self.profile),
         )
 
     def run_online(
@@ -243,8 +279,12 @@ class Simulator:
         # the live layout: plan, router and failover manager SHARE the
         # member matrix, so masking/repair is visible to the next microbatch
         live = Placement(pl.member, self.capacity, pl.node_weights)
-        router = ReplicaRouter(live.member)
-        failover = FailoverManager(live)
+        router = ReplicaRouter(
+            live.member,
+            node_cost=(self.profile.routing_cost()
+                       if self.profile is not None else None),
+        )
+        failover = FailoverManager(live, profile=self.profile)
         detector = None
         if service is not None:
             detector = DriftDetector(
@@ -368,10 +408,11 @@ class Simulator:
             else np.zeros(0, dtype=np.int64)
         )
         live = failover.pl  # the final hot-swapped layout
+        final_loads = live.partition_weights()
         return SimulationResult(
             algorithm=algo_name,
             spans=spans,
-            loads=live.partition_weights(),
+            loads=final_loads,
             access_load=router.load.copy(),
             energy_joules=total_energy,
             shipped_gb=total_shipped,
@@ -379,6 +420,10 @@ class Simulator:
             replication_factor=live.replication_factor(),
             placement_stats=pl.stats,
             online_stats=online_stats,
+            active_machines=int((final_loads > 0).sum()),
+            cluster_power_w=self.energy.cluster_power(
+                final_loads, self.profile
+            ),
         )
 
     def compare(

@@ -139,6 +139,33 @@ FLAGS = {
     # (0 disables the pass; repair only ever copies into free space, so it
     # is capacity-safe by construction).
     "scale_boundary_repair": 256,
+    # placement objective.  "span" (default) is the paper's objective:
+    # balance load across all partitions and minimize average span.
+    # "energy" concentrates the fit onto a capacity-descending prefix of
+    # ACTIVE partitions (smallest prefix holding ~1.25x the total item
+    # weight) so the remaining rows stay empty and can be powered down —
+    # the LMBR cold start and its dest_mask are restricted to the active
+    # set; the simulator reports active_machines / cluster power per fit.
+    "placement_objective": "span",
+    # per-item durability ceiling eps for Π p_fail ≤ eps (independent
+    # partition failures, repro.core.cluster).  0.0 (default) disables the
+    # constraint; > 0 makes PlacementService fits add greedy low-fail-prob
+    # replicas post-fit until every item meets the ceiling (capacity-safe,
+    # validated by validate_durability).
+    "durability_eps": 0.0,
+    # LMBR gain penalty weight for destination access cost: a candidate
+    # move's gain is charged node_cost_weight * access_cost[dest] before
+    # the accept test, steering replicas toward cheap nodes.  0.0 (default)
+    # is bit-identical to the unpenalized engine; only engages when the fit
+    # is given a per-partition cost vector (NodeProfile.access_cost).
+    "node_cost_weight": 0.0,
+    # online router (balanced mode): cost-aware tie-break.  Off (default)
+    # equal-gain covers prefer the least-loaded partition.  On, the ledger
+    # permutation sorts by load * routing_cost (access cost + normalized
+    # active power from the NodeProfile) — a uniform profile gives a
+    # constant cost vector, so the permutation (and every routing decision)
+    # stays bit-identical to least-loaded.
+    "router_cost_aware": False,
 }
 
 
@@ -213,6 +240,20 @@ def set_variant(spec: str):
             FLAGS["drift_window"] = int(part[len("driftw"):])
         elif part.startswith("driftth"):
             FLAGS["drift_threshold"] = float(part[len("driftth"):])
+        elif part == "energy":
+            FLAGS["placement_objective"] = "energy"
+        elif part.startswith("durab"):
+            eps = float(part[len("durab"):])
+            if eps < 0:
+                raise ValueError(f"durability_eps must be >= 0, got {eps}")
+            FLAGS["durability_eps"] = eps
+        elif part.startswith("nodecost"):
+            w = float(part[len("nodecost"):])
+            if w < 0:
+                raise ValueError(f"node_cost_weight must be >= 0, got {w}")
+            FLAGS["node_cost_weight"] = w
+        elif part.startswith("routercost"):
+            FLAGS["router_cost_aware"] = bool(int(part[len("routercost"):]))
         elif part.startswith("span"):
             backend = part[len("span"):]
             if backend not in ("auto", "numpy", "jax", "pallas"):
@@ -232,4 +273,6 @@ def reset():
                  router_microbatch=384, router_balance=False,
                  drift_window=512, drift_threshold=1.25,
                  router_ledger_epsilon=0.0, scale_shards=0, scale_workers=1,
-                 scale_boundary_repair=256)
+                 scale_boundary_repair=256, placement_objective="span",
+                 durability_eps=0.0, node_cost_weight=0.0,
+                 router_cost_aware=False)

@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..core.cluster import NodeProfile
 from ..core.hypergraph import Hypergraph
 from ..core.setcover import Placement
 
@@ -49,10 +50,25 @@ __all__ = ["FailoverManager"]
 
 
 class FailoverManager:
-    def __init__(self, placement: Placement):
+    def __init__(self, placement: Placement,
+                 profile: NodeProfile | None = None):
         self.pl = placement
         self._saved: dict[int, np.ndarray] = {}
         self._loads = placement.partition_weights()
+        # per-partition failure probability: repair prefers reliable
+        # survivors among equal-benefit candidates.  Without a profile the
+        # vector is constant, which degenerates the preference away —
+        # bit-identical to the pre-profile tie-break.
+        self._fail = (
+            np.asarray(profile.fail_prob, dtype=np.float64)
+            if profile is not None
+            else np.zeros(placement.num_partitions, dtype=np.float64)
+        )
+        if len(self._fail) != placement.num_partitions:
+            raise ValueError(
+                f"profile has {len(self._fail)} partitions, placement has "
+                f"{placement.num_partitions}"
+            )
         self.stats = dict(
             partitions_down=0, repaired_items=0, unrepairable_items=0,
         )
@@ -173,11 +189,14 @@ class FailoverManager:
             if not fits.any():
                 self.stats["unrepairable_items"] += 1
                 break
-            # max benefit; ties -> most free space, then lowest id
+            # max benefit; ties -> most reliable survivor, then most free
+            # space, then lowest id (the fail key is constant without a
+            # profile, so the legacy tie-break is untouched)
             cand = np.flatnonzero(fits)
             key = np.lexsort((
                 cand,                       # lowest id last resort
                 self._loads[cand],          # least loaded
+                self._fail[cand],           # lowest failure probability
                 -benefit[cand],             # max co-location benefit
             ))
             d = int(cand[key[0]])

@@ -108,15 +108,40 @@ class ReplicaRouter:
     """
 
     def __init__(self, member, microbatch: int | None = None,
-                 balance: bool | None = None):
+                 balance: bool | None = None, node_cost=None):
         self.member = self._as_member(member)
         self.load = np.zeros(self.member.shape[0], dtype=np.float64)
         self._microbatch = microbatch
         self._balance = balance
         self._perm: np.ndarray | None = None       # cached tie-break rows
         self._perm_load: np.ndarray | None = None  # ledger at last sort
+        self._perm_cost_aware = False              # key mode at last sort
+        self._node_cost: np.ndarray | None = None
         self.stats = dict(served_queries=0, microbatches=0, plan_swaps=0,
                           ledger_sorts=0)
+        if node_cost is not None:
+            self.set_node_cost(node_cost)
+
+    def set_node_cost(self, node_cost) -> None:
+        """Install the per-partition serving-cost key the cost-aware
+        tie-break multiplies into the ledger (typically
+        `NodeProfile.routing_cost()`: access cost + normalized active
+        power).  Only read when ``flags.FLAGS["router_cost_aware"]`` is on;
+        a UNIFORM cost vector scales every ledger entry equally, so the
+        permutation — and routing — stay bit-identical to least-loaded."""
+        if node_cost is None:
+            self._node_cost = None
+        else:
+            nc = np.asarray(node_cost, dtype=np.float64)
+            if nc.shape != (self.num_partitions,):
+                raise ValueError(
+                    f"node_cost must be ({self.num_partitions},), "
+                    f"got {nc.shape}"
+                )
+            if (nc <= 0).any():
+                raise ValueError("node_cost entries must be positive")
+            self._node_cost = nc
+        self._perm = None  # cached permutation keyed on the old cost
 
     @staticmethod
     def _as_member(obj) -> np.ndarray:
@@ -189,16 +214,25 @@ class ReplicaRouter:
 
     def _ledger_perm(self) -> np.ndarray:
         """Rows ascending by (ledger load, id), rebuilt only when the ledger
-        has drifted past ``router_ledger_epsilon`` since the last sort."""
-        eps = float(_flags.FLAGS.get("router_ledger_epsilon", 0.0))
-        if self._perm is not None:
+        has drifted past ``router_ledger_epsilon`` since the last sort.
+        With ``router_cost_aware`` on and a node-cost vector installed the
+        sort key becomes ``load * node_cost`` — least COST, not least
+        load — steering equal-gain ties toward cheap partitions."""
+        cost_aware = (
+            bool(_flags.FLAGS.get("router_cost_aware", False))
+            and self._node_cost is not None
+        )
+        if self._perm is not None and cost_aware == self._perm_cost_aware:
+            eps = float(_flags.FLAGS.get("router_ledger_epsilon", 0.0))
             drift = np.abs(self.load - self._perm_load)
             if not (drift > eps * np.maximum(self._perm_load, 1.0)).any():
                 return self._perm
+        key = self.load * self._node_cost if cost_aware else self.load
         self._perm = np.lexsort(
-            (np.arange(self.num_partitions), self.load)
+            (np.arange(self.num_partitions), key)
         ).astype(np.int64)
         self._perm_load = self.load.copy()
+        self._perm_cost_aware = cost_aware
         self.stats["ledger_sorts"] += 1
         return self._perm
 

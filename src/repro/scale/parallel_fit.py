@@ -38,6 +38,7 @@ import numpy as np
 
 from .. import flags as _flags
 from ..core.algorithms import ALGORITHMS, lmbr
+from ..core.cluster import normalize_capacity
 from ..core.hypergraph import Hypergraph
 from ..core.setcover import Placement
 from .sharder import ShardingPlan, shard_workload
@@ -113,7 +114,7 @@ def _run_fits(payloads, workers: int):
 def fit_sharded_placement(
     hg: Hypergraph,
     num_partitions: int,
-    capacity: float,
+    capacity: "float | np.ndarray",
     algorithm: str = "lmbr",
     seed: int = 0,
     nruns: int = 2,
@@ -127,6 +128,7 @@ def fit_sharded_placement(
     regardless of worker count."""
     if algorithm not in ALGORITHMS:
         raise KeyError(f"unknown algorithm {algorithm!r}")
+    capacity = normalize_capacity(capacity)
     if num_shards is None:
         num_shards = int(_flags.FLAGS.get("scale_shards", 0))
     if num_shards <= 0:
@@ -159,7 +161,7 @@ def fit_sharded_placement(
         member[np.ix_(rows, sharding.shards[s].items)] = sub_member
         if sub_stats:
             shard_moves += int(sub_stats.get("moves", 0))
-    merged = Placement(member, float(capacity), hg.node_weights)
+    merged = Placement(member, capacity, hg.node_weights)
     # capacity reconciliation: re-derive loads from the merged matrix and
     # enforce the global budget (raises on any overflowing row)
     merged.validate()
@@ -171,13 +173,13 @@ def fit_sharded_placement(
     if boundary_repair > 0 and len(sharding.boundary_edges):
         bhg = hg.subhypergraph_edges(sharding.boundary_edges)
         repaired = lmbr(
-            bhg, num_partitions, float(capacity), seed=seed,
+            bhg, num_partitions, capacity, seed=seed,
             initial=merged, max_moves=int(boundary_repair),
         )
         repaired.validate()
         repair_moves = int((repaired.stats or {}).get("moves", 0))
         merged = Placement(
-            repaired.member, float(capacity), hg.node_weights
+            repaired.member, capacity, hg.node_weights
         )
     t_repair = time.perf_counter() - t0
 

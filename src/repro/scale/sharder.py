@@ -60,6 +60,7 @@ import dataclasses
 import numpy as np
 
 from ..core import hpa as hpa_mod
+from ..core.cluster import normalize_capacity
 from ..core.hypergraph import Hypergraph
 
 __all__ = ["connected_components", "ShardSpec", "ShardingPlan", "shard_workload"]
@@ -105,13 +106,16 @@ class ShardSpec:
     sub_hg:       relabeled hypergraph over those items (internal edges +
                   local fragments of boundary edges)
     num_partitions / capacity: this shard's slice of the global budget
+                  (capacity is the global scalar, or — heterogeneous
+                  clusters — this shard's contiguous slice of the global
+                  per-partition capacity vector)
     weight:       total item weight homed here
     """
 
     items: np.ndarray
     sub_hg: Hypergraph
     num_partitions: int
-    capacity: float
+    capacity: "float | np.ndarray"
     weight: float
 
 
@@ -169,15 +173,73 @@ def _cut_component(hg: Hypergraph, comp_items: np.ndarray, pieces: int,
     return [comp_items[assign == p] for p in range(pieces)]
 
 
+def _het_partition_budget(caps: np.ndarray, num_partitions: int,
+                          shard_w: np.ndarray, total_w: float) -> np.ndarray:
+    """Split a heterogeneous capacity vector's rows across shards.
+
+    Shards own CONTIGUOUS row slices (the merge in `parallel_fit` maps
+    shard s onto rows ``part_offset[s]:part_offset[s+1]``), so the budget
+    is a vector of row COUNTS: start weight-proportional (largest
+    remainder, >= 1 row each), then sweep left-to-right moving rows from
+    the largest-count donor into any shard whose slice cannot hold its
+    weight.  Deterministic; raises when no contiguous split fits."""
+    num_shards = len(shard_w)
+    if len(caps) != num_partitions:
+        raise ValueError(
+            f"capacity vector has {len(caps)} entries, want {num_partitions}"
+        )
+    if total_w > float(caps.sum()) + 1e-9:
+        raise ValueError(
+            f"{num_partitions} heterogeneous partitions (total capacity "
+            f"{float(caps.sum()):.1f}) cannot hold the sharded workload "
+            f"(weight {total_w:.1f})"
+        )
+    share = shard_w / max(total_w, 1e-12) * num_partitions
+    n_parts = np.maximum(1, np.floor(share).astype(np.int64))
+    # trim the >= 1 floor's overshoot from the largest counts
+    while int(n_parts.sum()) > num_partitions:
+        d = int(np.argmax(n_parts))
+        n_parts[d] -= 1
+    rem = num_partitions - int(n_parts.sum())
+    if rem > 0:
+        frac_order = np.lexsort(
+            (np.arange(num_shards), -(share - np.floor(share)))
+        )
+        for i in range(rem):
+            n_parts[frac_order[i % num_shards]] += 1
+    # feasibility sweep: contiguous slice capacities change whenever a
+    # count changes, so re-derive offsets each round; bounded rounds
+    for _ in range(4 * num_partitions):
+        off = np.zeros(num_shards + 1, dtype=np.int64)
+        np.cumsum(n_parts, out=off[1:])
+        slice_cap = np.add.reduceat(caps, off[:-1])
+        bad = np.flatnonzero(shard_w > slice_cap + 1e-9)
+        if not len(bad):
+            return n_parts
+        s = int(bad[0])
+        donors = np.flatnonzero((n_parts > 1) & (np.arange(num_shards) != s))
+        if not len(donors):
+            break
+        d = int(donors[np.lexsort((donors, -n_parts[donors]))[0]])
+        n_parts[d] -= 1
+        n_parts[s] += 1
+    raise ValueError(
+        "no contiguous heterogeneous partition split fits the shard "
+        "weights; reduce num_shards or rebalance capacities"
+    )
+
+
 def shard_workload(
     hg: Hypergraph,
     num_partitions: int,
-    capacity: float,
+    capacity: "float | np.ndarray",
     num_shards: int,
     seed: int = 0,
 ) -> ShardingPlan:
     """Decompose `hg` into `num_shards` near-independent sub-workloads and
-    allocate the `num_partitions` x `capacity` budget across them."""
+    allocate the `num_partitions` x `capacity` budget across them
+    (``capacity`` may be the global per-partition vector; each shard then
+    receives its contiguous slice)."""
     if num_shards < 1:
         raise ValueError("num_shards must be >= 1")
     num_shards = min(num_shards, num_partitions)
@@ -215,25 +277,32 @@ def shard_workload(
         item_shard[pieces[pi]] = s
         shard_w[s] += pw[pi]
 
-    # partition budget: every shard gets at least its feasibility minimum
-    # (ceil(weight / capacity)); the remainder follows weight (largest
-    # remainder method, ties -> lowest shard id)
-    n_min = np.maximum(
-        1, np.ceil(shard_w / capacity - 1e-9).astype(np.int64)
-    )
-    if int(n_min.sum()) > num_partitions:
-        raise ValueError(
-            f"{num_partitions} partitions x {capacity} cannot hold the "
-            f"sharded workload (needs >= {int(n_min.sum())})"
+    het = isinstance(capacity, np.ndarray) and capacity.ndim
+    if het:
+        n_parts = _het_partition_budget(
+            np.asarray(capacity, dtype=np.float64), num_partitions,
+            shard_w, total_w,
         )
-    spare = num_partitions - int(n_min.sum())
-    share = shard_w / max(total_w, 1e-12) * spare
-    extra = np.floor(share).astype(np.int64)
-    rem = spare - int(extra.sum())
-    if rem > 0:
-        frac_order = np.lexsort((np.arange(num_shards), -(share - extra)))
-        extra[frac_order[:rem]] += 1
-    n_parts = n_min + extra
+    else:
+        # partition budget: every shard gets at least its feasibility
+        # minimum (ceil(weight / capacity)); the remainder follows weight
+        # (largest remainder method, ties -> lowest shard id)
+        n_min = np.maximum(
+            1, np.ceil(shard_w / capacity - 1e-9).astype(np.int64)
+        )
+        if int(n_min.sum()) > num_partitions:
+            raise ValueError(
+                f"{num_partitions} partitions x {capacity} cannot hold the "
+                f"sharded workload (needs >= {int(n_min.sum())})"
+            )
+        spare = num_partitions - int(n_min.sum())
+        share = shard_w / max(total_w, 1e-12) * spare
+        extra = np.floor(share).astype(np.int64)
+        rem = spare - int(extra.sum())
+        if rem > 0:
+            frac_order = np.lexsort((np.arange(num_shards), -(share - extra)))
+            extra[frac_order[:rem]] += 1
+        n_parts = n_min + extra
     part_offset = np.zeros(num_shards + 1, dtype=np.int64)
     np.cumsum(n_parts, out=part_offset[1:])
 
@@ -303,7 +372,12 @@ def shard_workload(
         )
         shards.append(ShardSpec(
             items=items, sub_hg=sub_hg, num_partitions=int(n_parts[s]),
-            capacity=float(capacity), weight=float(shard_w[s]),
+            capacity=(
+                normalize_capacity(
+                    capacity[part_offset[s]:part_offset[s + 1]].copy()
+                ) if het else float(capacity)
+            ),
+            weight=float(shard_w[s]),
         ))
     return ShardingPlan(
         item_shard=item_shard, shards=shards, part_offset=part_offset,

@@ -1,0 +1,45 @@
+"""Tier-1 promotion of `benchmarks/energy_model.py`'s fig. 1/5 claim checks.
+
+The benchmark reproduces the paper's span-vs-latency-vs-energy experiment in
+the calibrated affine model and asserts three claims the paper measures:
+complex joins get FASTER and cheaper under co-location, simple aggregates
+get slower but still cheaper, and every query's energy drops (paper:
+31-79%).  Promoting them here keeps the energy model honest against
+`EnergyModel` refactors (the per-node `cluster_power` addition must not
+perturb the per-query affine path)."""
+
+import os
+import sys
+
+import pytest
+
+sys.path.insert(
+    0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+
+from benchmarks import energy_model  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def rows():
+    return energy_model.run(quick=True)
+
+
+def test_joins_faster_and_cheaper(rows):
+    joins = [r for r in rows if r["kind"] == "join"]
+    assert joins
+    assert all(r["rt_change_pct"] < 0 for r in joins)
+    assert all(r["energy_reduction_pct"] > 0 for r in joins)
+
+
+def test_aggregates_trade_latency_for_energy(rows):
+    aggs = [r for r in rows if r["kind"] == "aggregate"]
+    assert aggs
+    assert all(r["rt_change_pct"] > 0 for r in aggs)
+    assert all(r["energy_reduction_pct"] > 0 for r in aggs)
+
+
+def test_all_queries_cheaper_in_paper_range(rows):
+    assert len(rows) == len(energy_model.QUERIES)
+    for r in rows:
+        assert 0 < r["energy_reduction_pct"] < 100

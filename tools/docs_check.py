@@ -34,11 +34,15 @@ sys.path.insert(0, str(REPO))  # for `benchmarks.*` modules
 from repro import flags  # noqa: E402
 
 FLAG_PREFIXES = ("span_", "lmbr_", "mla_", "moe_", "accum_", "sp_",
-                 "router_", "drift_", "scale_")
+                 "router_", "drift_", "scale_", "placement_", "durability_",
+                 "node_")
 # flag-prefixed identifiers that are NOT flags (kernel / bench row names,
-# serving counters)
+# serving counters, profile columns, API parameters)
 NON_FLAGS = {"span_gain", "span_gain_calibration", "span_gain_ref",
-             "span_gain_tile", "span_round_calibration", "drift_fires"}
+             "span_gain_tile", "span_round_calibration", "drift_fires",
+             "node_weights", "node_cost", "placement_seconds",
+             "placement_stats", "durability_copies", "durability_eps=0",
+             "placement_s", "placement_applications", "span_ratio"}
 # backticked tokens that should parse as --variant specs
 VARIANT_RE = re.compile(
     r"^(baseline|mla_decomp|sp2?|accum\d+|cf[\d.]+|spanth\d+|peelth\d+|"
@@ -47,7 +51,8 @@ VARIANT_RE = re.compile(
     r"peel(vector|reference|auto|device|pallas)|"
     r"lmbrcache[01]|lmbrepoch(item|partition)|"
     r"routerbal[01]|routermb\d+|routereps[\d.]+|"
-    r"driftw\d+|driftth[\d.]+|shards\d+|scalew\d+|brepair\d+)"
+    r"driftw\d+|driftth[\d.]+|shards\d+|scalew\d+|brepair\d+|"
+    r"energy|durab[\d.e+-]+|nodecost[\d.]+|routercost[01])"
     r"(\+.+)?$"
 )
 
