@@ -1,7 +1,7 @@
 # Shared gates for every PR: run the same commands CI / the next session runs.
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast bench-smoke bench ci docs-check
+.PHONY: test test-fast test-migration bench-smoke bench ci docs-check
 
 # tier-1 verify (ROADMAP contract) — fully green since PR 2 fixed the
 # seed's jax/pallas API drift; keep it that way.
@@ -20,13 +20,21 @@ docs-check:
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
+# the migration invariant suite under BOTH sharded-fit paths: serial
+# (--scale-workers 1) and the process pool (--scale-workers 2); the
+# sharded-target test parametrizes over the worker counts
+test-migration:
+	$(PY) -m pytest -x -q tests/test_migration.py --scale-workers 1
+	$(PY) -m pytest -x -q tests/test_migration.py --scale-workers 2
+
 # cheap perf signal: span engine + LMBR move engine + online serving +
-# cluster-scale pipeline + heterogeneous-cluster gates (BENCH_spans.json,
-# BENCH_lmbr.json, BENCH_online.json, BENCH_scale.json, BENCH_energy.json);
-# the JSONs are copied to the repo root as the committed baselines
-# (results/ is gitignored scratch)
+# live migration + cluster-scale pipeline + heterogeneous-cluster gates
+# (BENCH_spans.json, BENCH_lmbr.json, BENCH_online.json,
+# BENCH_migration.json, BENCH_scale.json, BENCH_energy.json); the JSONs
+# are copied to the repo root as the committed baselines (results/ is
+# gitignored scratch)
 bench-smoke:
-	$(PY) -m benchmarks.run --only bench_spans,bench_lmbr,bench_online,bench_scale,bench_energy
+	$(PY) -m benchmarks.run --only bench_spans,bench_lmbr,bench_online,bench_migration,bench_scale,bench_energy
 	cp benchmarks/results/BENCH_*.json .
 
 # full quick benchmark suite (all paper figures, single seed)

@@ -23,6 +23,7 @@ SECTIONS = [
     ("bench_spans", "span engine: reference loop vs batched bitset (+jax)"),
     ("bench_lmbr", "LMBR move engine: reference peel vs vectorized + cache"),
     ("bench_online", "online serving: router qps, drift recovery, failover"),
+    ("bench_migration", "live migration: paced full plan swap vs instant"),
     ("bench_scale", "cluster-scale: streaming ingestion, sharded parallel fits"),
     ("bench_energy", "heterogeneous cluster: energy objective, durability"),
     ("placement_applications", "framework: MoE experts / shards / checkpoints"),

@@ -373,14 +373,22 @@ class PlacementService:
         max_moves: int = 64,
         dest_mask: np.ndarray | None = None,
         profile: NodeProfile | None = None,
-    ) -> PlacementPlan:
+        as_migration: bool = False,
+    ):
         """Incremental adaptation to workload drift: LMBR warm-started from
         the current placement; only copies items into free space (existing
         replicas never move, so the delta is cheap to apply online).
         ``dest_mask`` ((N,) bool) excludes partitions from receiving copies
         — the outage path: refitting on a failure-masked layout must never
         target a down partition.  A ``profile`` supplies the access-cost
-        vector for the engine's optional ``node_cost_weight`` penalty."""
+        vector for the engine's optional ``node_cost_weight`` penalty.
+
+        ``as_migration=True`` returns the change as a
+        `repro.online.MigrationPlan` (pacing from the ``migration_*``
+        flags, ``.target`` carrying the new `PlacementPlan`) instead of a
+        plan to swap atomically — a warm-started refit only adds replicas,
+        so the schedule is pure copies and serving from the union layout
+        while they stream in never loses coverage."""
         hg = Hypergraph.from_edges(
             queries, num_nodes=plan.member.shape[1],
             node_weights=plan.node_weights,
@@ -392,7 +400,32 @@ class PlacementService:
             node_cost=profile.access_cost if profile is not None else None,
         )
         pl.validate()
-        return PlacementPlan(
+        new_plan = PlacementPlan(
             pl.member, plan.capacity, plan.node_weights,
             f"{plan.algorithm}+refit", stats=pl.stats,
+        )
+        if as_migration:
+            return self.plan_migration(plan, new_plan)
+        return new_plan
+
+    def plan_migration(
+        self,
+        old_plan: PlacementPlan,
+        new_plan: PlacementPlan,
+        bandwidth: float | None = None,
+        concurrency: int | None = None,
+        headroom: float | None = None,
+    ):
+        """Diff two plans into a `repro.online.MigrationPlan` (deterministic
+        copies-before-drops transfer schedule; pacing defaults to the
+        ``migration_*`` flags).  The returned plan's ``.target`` is
+        ``new_plan``, so callers hand the schedule to a
+        `MigrationExecutor` / ``Simulator.run_online`` ``("migrate", ...)``
+        event and adopt the target once the last copy lands."""
+        from ..online.migration import plan_migration as _plan_migration
+
+        return _plan_migration(
+            old_plan, new_plan, node_weights=new_plan.node_weights,
+            bandwidth=bandwidth, concurrency=concurrency, headroom=headroom,
+            target=new_plan,
         )

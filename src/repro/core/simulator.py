@@ -251,6 +251,17 @@ class Simulator:
             uncovered item are counted ``degraded_queries``, not served.
           * ``("up", p)`` — p's saved replicas come back.
           * ``("repair", k)`` — explicit repair pass to k live copies.
+          * ``("migrate", target)`` — begin migrating the live layout onto
+            ``target`` (a `PlacementPlan` / `Placement` / bool member
+            matrix, or a prebuilt `repro.online.MigrationPlan`).  With
+            ``flags.FLAGS["migration_bandwidth"]`` == 0 (the default) the
+            diff applies instantly between microbatches (the legacy atomic
+            hot-swap); > 0 streams it as bandwidth-paced replica transfers
+            (one tick per served query) while queries keep routing against
+            the union layout, old replicas dropped only after every new
+            copy of their item has landed.  Down/up events interact: a dead
+            transfer destination holds its copies (and the drops waiting on
+            them) until it returns.
 
         Passing a `PlacementService` as ``service`` arms the drift detector:
         after each microbatch the windowed avg span is compared against the
@@ -265,6 +276,11 @@ class Simulator:
         degraded_queries, ...)."""
         from .. import flags as _flags
         from ..online import DriftDetector, FailoverManager, ReplicaRouter
+        from ..online.migration import (
+            MigrationExecutor,
+            MigrationPlan,
+            plan_migration,
+        )
         from .placement_service import PlacementPlan
         from .setcover import batched_spans_csr
 
@@ -296,6 +312,76 @@ class Simulator:
                 hg.edge_ptr, hg.edge_nodes, pl.member
             ).mean()) if hg.num_edges else 0.0)
 
+        migrator: MigrationExecutor | None = None
+        migration_ticks = 0
+        mig_totals = dict(
+            migrations=0, migration_copies=0, migration_drops=0,
+            transferred=0.0, wasted=0.0, max_inflight=0.0,
+        )
+
+        def _fold_migration_stats(ex: MigrationExecutor) -> None:
+            nonlocal migration_ticks
+            migration_ticks += ex.now
+            mig_totals["migration_copies"] += ex.stats["copies_done"]
+            mig_totals["migration_drops"] += ex.stats["drops_done"]
+            mig_totals["transferred"] += ex.stats["transferred"]
+            mig_totals["wasted"] += ex.stats["wasted"]
+            mig_totals["max_inflight"] = max(
+                mig_totals["max_inflight"], ex.stats["max_inflight"]
+            )
+
+        def _finish_migration() -> None:
+            # transfers landed in-place in the shared live matrix; count the
+            # completed swap, re-sync the failover load ledger, and point the
+            # drift detector's warm-start plan at the (now target) layout
+            nonlocal migrator
+            _fold_migration_stats(migrator)
+            migrator = None
+            failover.resync_loads()
+            router.swap_plan(live.member)
+            if detector is not None:
+                detector.plan.member = live.member
+
+        def _start_migration(target) -> None:
+            nonlocal migrator
+            if migrator is not None:
+                raise ValueError(
+                    "a migration is already in flight; issue the next "
+                    "migrate event after it completes"
+                )
+            if isinstance(target, MigrationPlan):
+                mplan = target
+            else:
+                member = getattr(target, "member", target)
+                mplan = plan_migration(
+                    live.member, member, node_weights=live.node_weights,
+                )
+            mig_totals["migrations"] += 1
+            if mplan.bandwidth <= 0 or mplan.is_noop:
+                # legacy path: atomic hot-swap between microbatches
+                down = failover.down_partitions
+                if len(down) and (
+                    np.isin(mplan.copy_dest, down).any()
+                    or np.isin(mplan.drop_part, down).any()
+                ):
+                    raise ValueError(
+                        "instant migrate touches a down partition; set "
+                        "migration_bandwidth > 0 to pace it through the "
+                        "outage instead"
+                    )
+                mplan.apply(live.member)
+                mig_totals["migration_copies"] += mplan.num_copies
+                mig_totals["migration_drops"] += mplan.num_drops
+                mig_totals["transferred"] += mplan.bytes_to_move(
+                    live.node_weights
+                )
+                failover.resync_loads()
+                router.swap_plan(live.member)
+                if detector is not None:
+                    detector.plan.member = live.member
+            else:
+                migrator = MigrationExecutor(mplan, live)
+
         def _repair_workload() -> Hypergraph:
             # repair against the live window when the sketch has traffic,
             # else against the fit workload
@@ -303,16 +389,28 @@ class Simulator:
                 return detector.sketch.to_hypergraph()
             return hg
 
+        def _repair(k: int) -> None:
+            if migrator is not None:
+                failover.resync_loads()  # landed copies bypass the ledger
+            failover.repair(_repair_workload(), k=k)
+            if migrator is not None:
+                migrator.refresh_loads()  # repair copies bypass the executor
+
         def _apply(kind: str, arg) -> None:
             if kind == "down":
                 failover.partition_down(int(arg))
+                if migrator is not None:
+                    migrator.on_partition_down(int(arg))
                 if auto_repair:
-                    failover.repair(_repair_workload(), k=repair_k)
+                    _repair(repair_k)
             elif kind == "up":
                 failover.partition_up(int(arg))
+                if migrator is not None:
+                    migrator.on_partition_up(int(arg))
             elif kind == "repair":
-                failover.repair(_repair_workload(),
-                                k=int(arg) if arg else repair_k)
+                _repair(int(arg) if arg else repair_k)
+            elif kind == "migrate":
+                _start_migration(arg)
             else:
                 raise ValueError(f"unknown online event kind {kind!r}")
 
@@ -358,6 +456,12 @@ class Simulator:
                 self.energy.query_energy(scanned, batch.spans, shipped).sum()
             )
             total_shipped += float(shipped.sum())
+            if migrator is not None:
+                # one migration tick per served query: transfers pace
+                # against traffic, so bandwidth is "bytes per query"
+                migrator.advance(stop - pos)
+                if migrator.done:
+                    _finish_migration()
             if detector is not None:
                 detector.observe(
                     [nodes[ptr[i]: ptr[i + 1]] for i in range(len(ptr) - 1)],
@@ -368,8 +472,10 @@ class Simulator:
                 # excluded from receiving copies (dest_mask), so drift
                 # adaptation continues through arbitrarily long outages —
                 # skipped only while coverage is still broken (a refit
-                # cannot warm-start from a layout with unplaced items).
-                if detector.should_refit():
+                # cannot warm-start from a layout with unplaced items) or
+                # while a migration is in flight (the live layout is a
+                # union, not a fit result to warm-start from).
+                if migrator is None and detector.should_refit():
                     down = failover.down_partitions
                     if not down:
                         new_plan = detector.refit()
@@ -379,7 +485,15 @@ class Simulator:
                         new_plan = detector.refit(dest_mask=survivors)
                     else:
                         new_plan = None
-                    if new_plan is not None:
+                    if new_plan is None:
+                        pass
+                    elif float(_flags.FLAGS["migration_bandwidth"]) > 0:
+                        # pace the hot-swap: stream the refit diff as
+                        # transfers instead of swapping atomically.  `live`
+                        # keeps serving (union layout) and adopts the target
+                        # in place as copies land.
+                        _start_migration(new_plan)
+                    else:
                         router.swap_plan(new_plan.member)
                         live = new_plan.as_placement()
                         failover.rebase(live)
@@ -402,6 +516,25 @@ class Simulator:
                 drift_fires=int(detector.stats["drift_fires"]),
                 refits=int(detector.stats["refits"]),
                 windowed_avg_span=round(detector.windowed_avg_span, 4),
+            )
+        if mig_totals["migrations"]:
+            if migrator is not None:  # trace ended mid-migration
+                _fold_migration_stats(migrator)
+            online_stats.update(
+                migrations=int(mig_totals["migrations"]),
+                migration_copies=int(mig_totals["migration_copies"]),
+                migration_drops=int(mig_totals["migration_drops"]),
+                migration_transfer_gb=round(
+                    mig_totals["transferred"] * self.item_gb, 4
+                ),
+                migration_wasted_gb=round(
+                    mig_totals["wasted"] * self.item_gb, 4
+                ),
+                migration_max_inflight_gb=round(
+                    mig_totals["max_inflight"] * self.item_gb, 4
+                ),
+                migration_ticks=int(migration_ticks),
+                migration_done=bool(migrator is None),
             )
         spans = (
             np.concatenate(spans_parts) if spans_parts

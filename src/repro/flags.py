@@ -166,6 +166,26 @@ FLAGS = {
     # constant cost vector, so the permutation (and every routing decision)
     # stays bit-identical to least-loaded.
     "router_cost_aware": False,
+    # live plan migration: transfer bandwidth in item-weight units per
+    # served query (the executor's tick).  0.0 (the default) keeps the
+    # legacy ATOMIC hot-swap — plan changes in run_online (drift refits,
+    # "migrate" events) apply instantly between microbatches, bit-identical
+    # to the pre-migration behavior.  > 0 streams the plan diff as paced
+    # replica transfers through repro.online.migration, serving from the
+    # union layout until every copy lands.
+    "migration_bandwidth": 0.0,
+    # live plan migration: maximum concurrent in-flight transfers per
+    # DESTINATION partition (rucio-conveyor-style per-destination
+    # throttling).  Together with the largest scheduled copy this bounds
+    # the concurrent in-flight bytes by construction
+    # (MigrationPlan.inflight_bound).
+    "migration_concurrency": 4,
+    # live plan migration: capacity slack fraction for the union layout —
+    # a transfer only starts while the destination's committed + reserved
+    # load stays within capacity * (1 + headroom).  Too-tight headroom on
+    # a diff whose copies all wait on drops raises RuntimeError instead of
+    # deadlocking silently.
+    "migration_headroom": 0.10,
 }
 
 
@@ -254,6 +274,23 @@ def set_variant(spec: str):
             FLAGS["node_cost_weight"] = w
         elif part.startswith("routercost"):
             FLAGS["router_cost_aware"] = bool(int(part[len("routercost"):]))
+        elif part.startswith("migbw"):
+            bw = float(part[len("migbw"):])
+            if bw < 0:
+                raise ValueError(f"migration_bandwidth must be >= 0, got {bw}")
+            FLAGS["migration_bandwidth"] = bw
+        elif part.startswith("migconc"):
+            conc = int(part[len("migconc"):])
+            if conc < 1:
+                raise ValueError(
+                    f"migration_concurrency must be >= 1, got {conc}"
+                )
+            FLAGS["migration_concurrency"] = conc
+        elif part.startswith("mighead"):
+            head = float(part[len("mighead"):])
+            if head < 0:
+                raise ValueError(f"migration_headroom must be >= 0, got {head}")
+            FLAGS["migration_headroom"] = head
         elif part.startswith("span"):
             backend = part[len("span"):]
             if backend not in ("auto", "numpy", "jax", "pallas"):
@@ -275,4 +312,5 @@ def reset():
                  router_ledger_epsilon=0.0, scale_shards=0, scale_workers=1,
                  scale_boundary_repair=256, placement_objective="span",
                  durability_eps=0.0, node_cost_weight=0.0,
-                 router_cost_aware=False)
+                 router_cost_aware=False, migration_bandwidth=0.0,
+                 migration_concurrency=4, migration_headroom=0.10)

@@ -11,11 +11,25 @@ trace; this package serves queries AGAINST that layout while it changes:
               microbatches)
   failover  — partition down/up masking, coverage audit, span-aware repair
               of lost replicas into surviving free space
+  migration — live plan migration: old-vs-new layout diff, bandwidth-paced
+              replica transfer schedule (``flags.FLAGS
+              ["migration_bandwidth"]``), union-layout serving until every
+              copy lands, copies-before-drops per item
 
-`Simulator.run_online` (``repro.core.simulator``) wires the three into an
-event-capable trace replay; `benchmarks/bench_online.py` measures them.
+`Simulator.run_online` (``repro.core.simulator``) wires them into an
+event-capable trace replay; `benchmarks/bench_online.py` and
+`benchmarks/bench_migration.py` measure them.
 """
 
 from .router import ReplicaRouter, RoutedBatch, queries_to_csr  # noqa: F401
 from .drift import DriftDetector, WorkloadSketch  # noqa: F401
 from .failover import FailoverManager  # noqa: F401
+from .migration import (  # noqa: F401
+    MigrationExecutor,
+    MigrationPlan,
+    PlanDiff,
+    TransferEvent,
+    diff_plans,
+    diff_plans_reference,
+    plan_migration,
+)

@@ -99,6 +99,12 @@ class FailoverManager:
         self.pl = placement
         self._loads = placement.partition_weights()
 
+    def resync_loads(self) -> None:
+        """Re-sync the load ledger with the live member matrix after an
+        external in-place mutation (live-migration copies and drops land
+        directly in the shared matrix, bypassing this manager)."""
+        self._loads = self.pl.partition_weights()
+
     # ------------------------------------------------------------ down / up
     def partition_down(self, p: int) -> np.ndarray:
         """Mask partition p's membership row.  Returns the items that lost

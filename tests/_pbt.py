@@ -1,0 +1,25 @@
+"""Property-based-testing shim: the real `hypothesis` package when the
+environment has it, the vendored deterministic `_hypothesis_stub` otherwise.
+
+Test modules import the strategy surface from here instead of repeating the
+try/except fallback at every site, so installing hypothesis upgrades every
+property test to real shrinking/example-generation at once while offline
+containers keep running on the stub.  Only the API subset the stub mirrors
+is allowed through this shim: ``given``, ``settings`` (``max_examples``,
+``deadline``), and ``st.integers / floats / lists / data``.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # offline container: vendored deterministic fallback
+    from _hypothesis_stub import (  # noqa: F401
+        given,
+        settings,
+        strategies as st,
+    )
+
+    HAVE_HYPOTHESIS = False
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

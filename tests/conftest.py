@@ -1,0 +1,72 @@
+"""Shared test fixtures: the fault-injection harness for online runs and
+the ``scale_workers`` parametrization hook ``make test-migration`` uses to
+exercise both the serial and the process-pool sharded-fit paths."""
+
+import numpy as np
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--scale-workers",
+        action="store",
+        default="1",
+        help="comma-separated worker counts the scale_workers fixture "
+        "parametrizes over (make test-migration runs the suite with 1 "
+        "— serial sharded fits — and 2 — the process pool)",
+    )
+
+
+def pytest_generate_tests(metafunc):
+    if "scale_workers" in metafunc.fixturenames:
+        opt = metafunc.config.getoption("--scale-workers")
+        metafunc.parametrize(
+            "scale_workers", [int(x) for x in str(opt).split(",") if x]
+        )
+
+
+@pytest.fixture
+def fault_injected_run():
+    """Wrap `Simulator.run_online` in a randomized — but always legal —
+    storm of down/up events and assert the serving ledger balances:
+    every query is either served or counted degraded, never dropped.
+
+    Returns ``(SimulationResult, events)`` so callers can layer their own
+    assertions on top.  ``extra_events`` (e.g. a migrate) are merged in;
+    the generated faults never take down more than a third of the cluster
+    at once, and every ``down`` targets a live partition / every ``up`` a
+    dead one, mirroring what the failover manager accepts.
+    """
+
+    def _run(sim, hg, algorithm, *, fault_seed=0, num_events=8,
+             extra_events=(), **kw):
+        rng = np.random.default_rng(fault_seed)
+        n = sim.n
+        trace = kw.get("trace")
+        nq = (trace if trace is not None else hg).num_edges
+        down: set[int] = set()
+        events = list(extra_events)
+        pos = 0
+        for _ in range(int(num_events)):
+            pos += int(rng.integers(1, max(2, nq // (num_events + 1))))
+            if pos >= nq:
+                break
+            if down and (len(down) >= max(1, n // 3)
+                         or rng.random() < 0.5):
+                p = int(rng.choice(sorted(down)))
+                down.discard(p)
+                events.append((pos, "up", p))
+            else:
+                live = [p for p in range(n) if p not in down]
+                p = int(rng.choice(live))
+                down.add(p)
+                events.append((pos, "down", p))
+        res = sim.run_online(hg, algorithm, events=events, **kw)
+        s = res.online_stats
+        assert s["served_queries"] + s["degraded_queries"] == nq, (
+            f"serving ledger leaked queries: {s['served_queries']} served "
+            f"+ {s['degraded_queries']} degraded != {nq} total"
+        )
+        return res, events
+
+    return _run

@@ -293,6 +293,33 @@ def test_energy_objective_ignored_on_warm_start():
     assert (warm.member == cold.member).all()
 
 
+def test_energy_objective_warm_refit_byte_identical():
+    """Regression pin on the cold-start-only contract: a service `refit`
+    (warm-started LMBR with a real move budget) must be byte-identical
+    with and without placement_objective="energy" — the objective shapes
+    cold fits only, never online adaptation."""
+    wl = random_workload(num_items=300, num_queries=900, seed=6)
+    svc = PlacementService("lmbr", seed=0)
+    plan = svc.fit(wl.queries, 300, 12, 80)
+    drifted = wl.queries[:300]
+    span_refit = svc.refit(plan, drifted, max_moves=64)
+    flags.set_variant("energy")
+    try:
+        energy_refit = svc.refit(plan, drifted, max_moves=64)
+    finally:
+        flags.reset()
+    assert (span_refit.member == energy_refit.member).all()
+    # the paced-migration surface inherits the same contract: identical
+    # refits diff into identical transfer schedules
+    mig_span = svc.plan_migration(plan, span_refit)
+    flags.set_variant("energy")
+    try:
+        mig_energy = svc.plan_migration(plan, energy_refit)
+    finally:
+        flags.reset()
+    assert mig_span.to_json() == mig_energy.to_json()
+
+
 def test_node_cost_weight_zero_bit_identical():
     wl = random_workload(num_items=300, num_queries=900, seed=7)
     hg = wl.hypergraph

@@ -3,10 +3,7 @@
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:  # offline container: vendored deterministic fallback
-    from _hypothesis_stub import given, settings, strategies as st
+from _pbt import given, settings, st
 
 from repro.core.hpa import connectivity_cost, partition, ubfactor
 from repro.core.hypergraph import Hypergraph

@@ -1,0 +1,548 @@
+"""Live plan migration invariants (repro.online.migration): schedule-diff
+oracle equality, union-layout routability at every tick, copy-before-drop
+ordering per item, capacity/headroom safety by construction, mid-migration
+failover, and bit-identity of the final layout with the target plan."""
+
+import numpy as np
+import pytest
+
+from _pbt import given, settings, st
+from repro import flags
+from repro.core import (
+    ALGORITHMS,
+    PlacementService,
+    Simulator,
+    random_workload,
+)
+from repro.core.placement_service import PlacementPlan
+from repro.core.setcover import Placement
+from repro.online import (
+    MigrationExecutor,
+    MigrationPlan,
+    diff_plans,
+    diff_plans_reference,
+    plan_migration,
+)
+
+
+@pytest.fixture(scope="module")
+def plans():
+    """A workload and two genuinely different layouts for it (hpa vs lmbr):
+    the diff has both copies and drops."""
+    wl = random_workload(num_items=150, num_queries=400, density=4, seed=7)
+    hg = wl.hypergraph
+    pa = ALGORITHMS["hpa"](hg, 10, 32, seed=0)
+    pb = ALGORITHMS["lmbr"](hg, 10, 32, seed=0, max_moves=400)
+    pa.validate()
+    pb.validate()
+    d = diff_plans(pa.member, pb.member)
+    assert d.num_copies > 0 and d.num_drops > 0, "fixture diff degenerate"
+    return hg, pa, pb
+
+
+def _fresh_old(plans):
+    _, pa, _ = plans
+    return Placement(pa.member.copy(), pa.capacity, pa.node_weights)
+
+
+def _target_loads(pl):
+    return np.array([pl.node_weights[row].sum() for row in pl.member])
+
+
+# ------------------------------------------------------------- diff oracle
+def test_diff_matches_reference_on_fits(plans):
+    _, pa, pb = plans
+    d = diff_plans(pa.member, pb.member)
+    r = diff_plans_reference(pa.member, pb.member)
+    assert np.array_equal(d.copy_dest, r.copy_dest)
+    assert np.array_equal(d.copy_item, r.copy_item)
+    assert np.array_equal(d.drop_part, r.drop_part)
+    assert np.array_equal(d.drop_item, r.drop_item)
+
+
+def test_diff_matches_reference_on_random_matrices():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        n = int(rng.integers(1, 7))
+        v = int(rng.integers(1, 30))
+        a = rng.random((n, v)) < 0.4
+        b = rng.random((n, v)) < 0.4
+        d, r = diff_plans(a, b), diff_plans_reference(a, b)
+        assert np.array_equal(d.copy_dest, r.copy_dest)
+        assert np.array_equal(d.copy_item, r.copy_item)
+        assert np.array_equal(d.drop_part, r.drop_part)
+        assert np.array_equal(d.drop_item, r.drop_item)
+
+
+def test_diff_shape_mismatch_raises():
+    with pytest.raises(ValueError, match="shapes differ"):
+        diff_plans(np.zeros((2, 3), dtype=bool), np.zeros((2, 4), dtype=bool))
+    with pytest.raises(TypeError):
+        diff_plans(np.zeros((2, 3)), np.zeros((2, 3)))  # not bool
+
+
+# --------------------------------------------------------------- plan/json
+def test_plan_migration_validates_target_coverage(plans):
+    _, pa, _ = plans
+    empty = np.zeros_like(pa.member)
+    with pytest.raises(ValueError, match="uncovered"):
+        plan_migration(pa.member, empty, node_weights=pa.node_weights)
+
+
+def test_plan_migration_validates_pacing(plans):
+    _, pa, pb = plans
+    with pytest.raises(ValueError, match="bandwidth"):
+        plan_migration(pa.member, pb.member, bandwidth=-1.0)
+    with pytest.raises(ValueError, match="concurrency"):
+        plan_migration(pa.member, pb.member, concurrency=0)
+    with pytest.raises(ValueError, match="headroom"):
+        plan_migration(pa.member, pb.member, headroom=-0.1)
+
+
+def test_migration_plan_json_roundtrip(plans):
+    _, pa, pb = plans
+    mp = plan_migration(pa.member, pb.member, node_weights=pa.node_weights,
+                        bandwidth=7.5, concurrency=3, headroom=0.2)
+    back = MigrationPlan.from_json(mp.to_json())
+    assert back.num_partitions == mp.num_partitions
+    assert back.num_items == mp.num_items
+    for f in ("copy_dest", "copy_item", "copy_src", "drop_part",
+              "drop_item"):
+        assert np.array_equal(getattr(back, f), getattr(mp, f)), f
+    assert back.bandwidth == mp.bandwidth
+    assert back.concurrency == mp.concurrency
+    assert back.headroom == mp.headroom
+
+
+# ---------------------------------------------------------------- schedule
+def _paced_plan(plans, **kw):
+    _, pa, pb = plans
+    kw.setdefault("bandwidth", 8.0)
+    kw.setdefault("concurrency", 3)
+    kw.setdefault("headroom", 0.15)
+    return plan_migration(pa.member, pb.member,
+                          node_weights=pa.node_weights, **kw)
+
+
+def test_schedule_deterministic(plans):
+    mp = _paced_plan(plans)
+    e1 = mp.schedule(_fresh_old(plans))
+    e2 = mp.schedule(_fresh_old(plans))
+    assert e1 == e2
+    assert len(e1) == mp.num_copies + mp.num_drops
+
+
+def test_schedule_copy_before_drop_per_item(plans):
+    """Every copy event of an item precedes every drop event of that item
+    — both in event order and in tick order."""
+    mp = _paced_plan(plans)
+    events = mp.schedule(_fresh_old(plans))
+    last_copy_pos: dict[int, int] = {}
+    last_copy_tick: dict[int, int] = {}
+    for i, ev in enumerate(events):
+        if ev.kind == "copy":
+            last_copy_pos[ev.item] = i
+            last_copy_tick[ev.item] = ev.tick
+    for i, ev in enumerate(events):
+        if ev.kind != "drop":
+            continue
+        if ev.item in last_copy_pos:  # pure-drop items have no copies
+            assert i > last_copy_pos[ev.item]
+            assert ev.tick >= last_copy_tick[ev.item]
+
+
+def test_schedule_union_layout_every_event(plans):
+    """Replaying the schedule, the live layout stays inside the union:
+    old&new <= member <= old|new at every event, and no item that had
+    coverage ever loses it (routability is preserved mid-migration)."""
+    _, pa, pb = plans
+    mp = _paced_plan(plans)
+    events = mp.schedule(_fresh_old(plans))
+    member = pa.member.copy()
+    both = pa.member & pb.member
+    union = pa.member | pb.member
+    covered0 = member.any(axis=0)
+    for ev in events:
+        if ev.kind == "copy":
+            assert not member[ev.partition, ev.item]
+            member[ev.partition, ev.item] = True
+        else:
+            assert member[ev.partition, ev.item]
+            member[ev.partition, ev.item] = False
+        assert (member >= both).all(), "member lost an old&new replica"
+        assert (member <= union).all(), "member left the old|new union"
+        assert (member.any(axis=0) >= covered0).all(), "coverage lost"
+    assert np.array_equal(member, pb.member), "final layout != target"
+
+
+def test_executor_final_bit_identity_and_headroom(plans):
+    """Stepping the executor tick by tick: reserved+committed loads never
+    exceed capacity*(1+headroom), the in-flight volume stays inside the
+    declared bound, the per-destination concurrency cap holds, and the
+    final live matrix is bit-identical with the target plan."""
+    _, pa, pb = plans
+    mp = _paced_plan(plans)
+    live = _fresh_old(plans)
+    ex = MigrationExecutor(mp, live)
+    cap_bound = live.capacity_vec * (1.0 + mp.headroom) + 1e-9
+    infl_bound = mp.inflight_bound(pa.node_weights) + 1e-9
+    guard = 0
+    while not ex.done:
+        ex.advance(1)
+        guard += 1
+        assert guard < 100_000
+        assert (ex.loads() <= cap_bound).all(), "headroom bound violated"
+        assert ex.inflight_bytes <= infl_bound, "in-flight bound violated"
+        per_dest = np.bincount([t.dest for t in ex._active],
+                               minlength=mp.num_partitions)
+        assert per_dest.max(initial=0) <= mp.concurrency
+        # real replica loads can never exceed the reserved-load ledger view
+        assert (live.partition_weights() <= cap_bound).all()
+    assert np.array_equal(live.member, pb.member)
+    assert ex.stats["copies_done"] == mp.num_copies
+    assert ex.stats["drops_done"] == mp.num_drops
+    assert ex.stats["transferred"] == pytest.approx(
+        mp.bytes_to_move(pa.node_weights)
+    )
+
+
+def test_executor_requires_bandwidth(plans):
+    mp = _paced_plan(plans, bandwidth=0.0)
+    with pytest.raises(ValueError, match="bandwidth"):
+        MigrationExecutor(mp, _fresh_old(plans))
+
+
+def test_instant_apply_roundtrip(plans):
+    _, pa, pb = plans
+    mp = _paced_plan(plans)
+    out = mp.apply(pa.member.copy())
+    assert np.array_equal(out, pb.member)
+
+
+def test_stalled_migration_raises():
+    """Two full partitions swapping their single items with zero headroom
+    can never start a transfer: the executor must refuse loudly instead of
+    spinning or violating the capacity bound."""
+    old = np.array([[True, False], [False, True]])
+    new = np.array([[False, True], [True, False]])
+    w = np.ones(2)
+    mp = plan_migration(old, new, node_weights=w, bandwidth=5.0,
+                        concurrency=2, headroom=0.0)
+    ex = MigrationExecutor(mp, Placement(old.copy(), 1.0, w))
+    with pytest.raises(RuntimeError, match="stalled"):
+        ex.advance(10)
+    # with headroom for one extra item the same swap completes
+    live = Placement(old.copy(), 1.0, w)
+    ex2 = MigrationExecutor(
+        plan_migration(old, new, node_weights=w, bandwidth=5.0,
+                       concurrency=2, headroom=1.0),
+        live,
+    )
+    ex2.advance(10)
+    assert ex2.done and np.array_equal(live.member, new)
+
+
+def test_mid_migration_destination_failure(plans):
+    """Kill a transfer destination mid-flight: its in-flight transfers
+    abort (bytes wasted), landed copies are counted un-landed while masked,
+    their drops are held, and after the partition returns the migration
+    completes to the exact target."""
+    _, pa, pb = plans
+    mp = _paced_plan(plans, bandwidth=4.0, headroom=0.25)
+    live = _fresh_old(plans)
+    ex = MigrationExecutor(mp, live)
+    dead = int(mp.copy_dest[0])
+    ex.advance(8)  # let transfers to `dead` get in flight / land
+    saved = live.member[dead].copy()
+    live.member[dead] = False  # what failover.partition_down does
+    ex.on_partition_down(dead)
+    ex.advance(30)  # progress elsewhere while the destination is dark
+    assert not ex.done, "cannot finish while a copy destination is down"
+    live.member[dead] = saved | live.member[dead]  # row restore
+    ex.on_partition_up(dead)
+    guard = 0
+    while not ex.done:
+        ex.advance(16)
+        guard += 1
+        assert guard < 10_000
+    assert np.array_equal(live.member, pb.member)
+    assert ex.stats["copies_done"] == mp.num_copies
+    assert ex.stats["drops_done"] == mp.num_drops
+    assert ex.stats["aborted_transfers"] >= 1
+    assert ex.stats["wasted"] >= 0.0
+
+
+# ------------------------------------------------------- property (shim'd)
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_prop_diff_apply_roundtrip(data):
+    """apply(diff(a, b), a) == b for arbitrary same-shape layouts, and the
+    vectorized diff always agrees with the brute-force oracle."""
+    n = data.draw(st.integers(min_value=1, max_value=5))
+    v = data.draw(st.integers(min_value=1, max_value=20))
+    bits_a = data.draw(st.lists(st.integers(min_value=0, max_value=1),
+                                min_size=n * v, max_size=n * v))
+    bits_b = data.draw(st.lists(st.integers(min_value=0, max_value=1),
+                                min_size=n * v, max_size=n * v))
+    a = np.array(bits_a, dtype=bool).reshape(n, v)
+    b = np.array(bits_b, dtype=bool).reshape(n, v)
+    mp = plan_migration(a, b, bandwidth=1.0)
+    assert np.array_equal(mp.apply(a.copy()), b)
+    d, r = diff_plans(a, b), diff_plans_reference(a, b)
+    assert np.array_equal(d.copy_dest, r.copy_dest)
+    assert np.array_equal(d.copy_item, r.copy_item)
+    assert np.array_equal(d.drop_part, r.drop_part)
+    assert np.array_equal(d.drop_item, r.drop_item)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_prop_migration_plan_json_roundtrip(data):
+    n = data.draw(st.integers(min_value=1, max_value=5))
+    v = data.draw(st.integers(min_value=1, max_value=20))
+    bits_a = data.draw(st.lists(st.integers(min_value=0, max_value=1),
+                                min_size=n * v, max_size=n * v))
+    bits_b = data.draw(st.lists(st.integers(min_value=0, max_value=1),
+                                min_size=n * v, max_size=n * v))
+    a = np.array(bits_a, dtype=bool).reshape(n, v)
+    b = np.array(bits_b, dtype=bool).reshape(n, v)
+    mp = plan_migration(
+        a, b,
+        bandwidth=data.draw(st.floats(min_value=0.0, max_value=50.0)),
+        concurrency=data.draw(st.integers(min_value=1, max_value=8)),
+        headroom=data.draw(st.floats(min_value=0.0, max_value=1.0)),
+    )
+    back = MigrationPlan.from_json(mp.to_json())
+    assert back.to_json() == mp.to_json()
+    assert np.array_equal(back.copy_dest, mp.copy_dest)
+    assert np.array_equal(back.drop_item, mp.drop_item)
+    assert back.bandwidth == mp.bandwidth
+    assert back.concurrency == mp.concurrency
+    assert back.headroom == mp.headroom
+
+
+# ------------------------------------------------------------------- flags
+def test_migration_flag_variants():
+    flags.set_variant("migbw2.5+migconc8+mighead0.25")
+    try:
+        assert flags.FLAGS["migration_bandwidth"] == 2.5
+        assert flags.FLAGS["migration_concurrency"] == 8
+        assert flags.FLAGS["migration_headroom"] == 0.25
+    finally:
+        flags.reset()
+    for bad in ("migbw-1", "migconc0", "mighead-0.5"):
+        with pytest.raises(ValueError):
+            flags.set_variant(bad)
+        flags.reset()
+
+
+# -------------------------------------------------------------- run_online
+def _old_algo(plans):
+    _, pa, _ = plans
+
+    def fit_old(hg, n, cap, **kw):
+        return Placement(pa.member.copy(), pa.capacity, pa.node_weights)
+
+    return fit_old
+
+
+def test_run_online_migrate_event_instant_default(plans):
+    """migration_bandwidth 0 (the default): a migrate event is the legacy
+    atomic hot-swap between microbatches — zero ticks, final loads equal
+    the target's, every query served."""
+    hg, pa, pb = plans
+    sim = Simulator(10, 32)
+    tgt = PlacementPlan(pb.member.copy(), 32.0, pb.node_weights, "lmbr")
+    res = sim.run_online(hg, _old_algo(plans),
+                         events=[(120, "migrate", tgt)])
+    s = res.online_stats
+    assert s["migrations"] == 1 and s["migration_done"]
+    assert s["migration_ticks"] == 0
+    assert s["plan_swaps"] == 1
+    assert s["degraded_queries"] == 0
+    assert s["migration_copies"] + s["migration_drops"] > 0
+    assert np.array_equal(res.loads, _target_loads(pb))
+
+
+def test_run_online_migrate_event_paced(plans):
+    """Paced migration serves every query from the union layout while the
+    transfers stream, and still lands bit-identical with the target."""
+    hg, pa, pb = plans
+    sim = Simulator(10, 32)
+    tgt = PlacementPlan(pb.member.copy(), 32.0, pb.node_weights, "lmbr")
+    flags.set_variant("migbw6.0+mighead0.15")
+    try:
+        res = sim.run_online(hg, _old_algo(plans),
+                             events=[(120, "migrate", tgt)])
+    finally:
+        flags.reset()
+    s = res.online_stats
+    assert s["migrations"] == 1 and s["migration_done"]
+    assert s["migration_ticks"] > 0
+    assert s["degraded_queries"] == 0
+    assert s["served_queries"] == hg.num_edges
+    assert np.array_equal(res.loads, _target_loads(pb))
+    mp = plan_migration(pa.member, pb.member, bandwidth=6.0)
+    assert s["migration_transfer_gb"] <= mp.bytes_to_move(
+        pa.node_weights
+    ) * sim.item_gb + 1e-9
+    assert s["migration_max_inflight_gb"] <= mp.inflight_bound(
+        pa.node_weights
+    ) * sim.item_gb + 1e-9
+
+
+def test_run_online_migrate_while_inflight_raises(plans):
+    hg, _, pb = plans
+    sim = Simulator(10, 32)
+    tgt = PlacementPlan(pb.member.copy(), 32.0, pb.node_weights, "lmbr")
+    flags.set_variant("migbw0.5+mighead0.15")  # too slow to finish early
+    try:
+        with pytest.raises(ValueError, match="already in flight"):
+            sim.run_online(hg, _old_algo(plans), events=[
+                (10, "migrate", tgt), (20, "migrate", tgt),
+            ])
+    finally:
+        flags.reset()
+
+
+def test_run_online_instant_migrate_during_outage_raises(plans):
+    """An atomic swap that writes a down partition would be resurrected by
+    the row restore; the simulator refuses it and demands pacing."""
+    hg, pa, pb = plans
+    mp = plan_migration(pa.member, pb.member, node_weights=pa.node_weights)
+    dead = int(mp.copy_dest[0])
+    sim = Simulator(10, 32)
+    tgt = PlacementPlan(pb.member.copy(), 32.0, pb.node_weights, "lmbr")
+    with pytest.raises(ValueError, match="down partition"):
+        sim.run_online(hg, _old_algo(plans), events=[
+            (10, "down", dead), (50, "migrate", tgt),
+        ])
+
+
+def test_run_online_migration_through_failover(plans):
+    """The ISSUE scenario end to end: start a paced migration, kill a
+    transfer destination mid-flight (auto-repair re-replicates what it
+    held), bring it back — the migration completes, the ledger balances,
+    and loads stay within the declared headroom."""
+    hg, pa, pb = plans
+    mp = plan_migration(pa.member, pb.member, node_weights=pa.node_weights)
+    dead = int(mp.copy_dest[0])
+    sim = Simulator(10, 32)
+    tgt = PlacementPlan(pb.member.copy(), 32.0, pb.node_weights, "lmbr")
+    flags.set_variant("migbw2.0+mighead0.25")
+    try:
+        res = sim.run_online(hg, _old_algo(plans), events=[
+            (60, "migrate", tgt), (100, "down", dead), (250, "up", dead),
+        ])
+    finally:
+        flags.reset()
+    s = res.online_stats
+    assert s["migrations"] == 1 and s["migration_done"]
+    assert s["migration_copies"] == mp.num_copies
+    assert s["migration_drops"] == mp.num_drops
+    assert s["served_queries"] + s["degraded_queries"] == hg.num_edges
+    assert s["partitions_down"] == 1
+    # final loads: the exact target plus at most the repair copies the
+    # outage added, all inside the declared headroom
+    assert (res.loads <= 32.0 * 1.25 + 1e-9).all()
+    assert (res.loads >= _target_loads(pb) - 1e-9).all()
+
+
+def test_run_online_migration_under_fault_storm(plans, fault_injected_run):
+    """Randomized (legal) down/up storms around a fast paced migration:
+    the serving ledger must balance and the run must never crash or
+    violate the headroom bound."""
+    hg, _, pb = plans
+    sim = Simulator(10, 32)
+    tgt = PlacementPlan(pb.member.copy(), 32.0, pb.node_weights, "lmbr")
+    flags.set_variant("migbw50.0+mighead0.35")
+    try:
+        res, events = fault_injected_run(
+            sim, hg, _old_algo(plans), fault_seed=5, num_events=6,
+            extra_events=[(5, "migrate", tgt)],
+        )
+    finally:
+        flags.reset()
+    s = res.online_stats
+    assert s["migrations"] == 1
+    assert (res.loads <= 32.0 * 1.35 + 1e-9).all()
+
+
+# ------------------------------------------------- service / drift / scale
+def test_refit_as_migration(plans):
+    """A warm-started refit only adds replicas: as_migration returns a
+    pure-copy MigrationPlan whose instant apply reproduces the refit
+    layout, with .target carrying the new plan."""
+    wl = random_workload(num_items=120, num_queries=500, density=5, seed=3)
+    svc = PlacementService("lmbr", seed=0)
+    plan = svc.fit(wl.queries, 120, 10, 40)
+    mp = svc.refit(plan, wl.queries[:200], max_moves=64, as_migration=True)
+    assert isinstance(mp, MigrationPlan)
+    assert mp.num_drops == 0, "warm-start refit must never drop replicas"
+    assert mp.target is not None
+    assert mp.target.algorithm.endswith("+refit")
+    out = mp.apply(plan.member.copy())
+    assert np.array_equal(out, mp.target.member)
+
+
+def test_run_online_paced_drift_hot_swap():
+    """With migration_bandwidth set, a drift-triggered refit streams in as
+    a paced migration instead of swapping atomically; every completed
+    migration still counts one plan swap, so refits == plan_swaps holds
+    once the last migration has drained."""
+    from repro.core import Hypergraph
+
+    old = random_workload(num_items=120, num_queries=600, density=6, seed=2)
+    new = random_workload(num_items=120, num_queries=600, density=6, seed=9)
+    trace = Hypergraph.from_edges(
+        [old.hypergraph.edge(e) for e in range(200)]
+        + [new.hypergraph.edge(e) for e in range(600)],
+        num_nodes=120,
+    )
+    flags.set_variant("driftw128+driftth1.1+routermb64+migbw40.0"
+                      "+mighead0.2")
+    try:
+        sim = Simulator(10, 40)  # slack capacity: the refit can add copies
+        res = sim.run_online(
+            old.hypergraph, ALGORITHMS["hpa"], name="hpa+drift",
+            trace=trace, service=PlacementService("lmbr", seed=0),
+            refit_moves=128, seed=0,
+        )
+    finally:
+        flags.reset()
+    s = res.online_stats
+    assert s["drift_fires"] >= 1 and s["refits"] >= 1
+    assert s["migrations"] == s["refits"]
+    assert s["migration_done"]
+    assert s["plan_swaps"] == s["refits"]
+    assert (res.loads <= 40.0 * 1.2 + 1e-9).all()
+
+
+def test_migrate_to_sharded_target(scale_workers):
+    """Migrating onto a fit_sharded target works under both the serial and
+    the process-pool sharded paths (make test-migration runs both), and the
+    final loads match the target exactly."""
+    wl = random_workload(num_items=200, num_queries=600, density=5, seed=11)
+    hg = wl.hypergraph
+    n, cap = 8, 60
+    svc = PlacementService("lmbr", seed=0)
+    tgt = svc.fit_sharded(hg, n, cap, num_shards=4, workers=scale_workers,
+                          max_moves=60)
+    old = ALGORITHMS["hpa"](hg, n, cap, seed=0)
+
+    def fit_old(h, n_, c_, **kw):
+        return Placement(old.member.copy(), old.capacity, old.node_weights)
+
+    sim = Simulator(n, cap)
+    flags.set_variant("migbw10.0+mighead0.2")
+    try:
+        res = sim.run_online(hg, fit_old, events=[(64, "migrate", tgt)])
+    finally:
+        flags.reset()
+    s = res.online_stats
+    assert s["migrations"] == 1 and s["migration_done"]
+    assert s["degraded_queries"] == 0
+    assert np.array_equal(
+        res.loads,
+        np.array([tgt.node_weights[row].sum() for row in tgt.member]),
+    )

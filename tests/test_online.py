@@ -439,3 +439,17 @@ def test_run_online_unknown_event_rejected(fitted):
     with pytest.raises(ValueError):
         sim.run_online(hg, ALGORITHMS["lmbr"], seed=0, max_moves=40,
                        events=[(0, "explode", 1)])
+
+
+def test_run_online_fault_storm_ledger(fault_injected_run):
+    """Randomized legal down/up storms: no query is ever lost — everything
+    is either served or counted degraded — and capacity holds after the
+    repairs the storm triggers."""
+    wl = random_workload(num_items=120, num_queries=500, density=5, seed=4)
+    sim = Simulator(10, 30)
+    res, events = fault_injected_run(
+        sim, wl.hypergraph, ALGORITHMS["lmbr"], fault_seed=3,
+        num_events=10, seed=0, max_moves=40,
+    )
+    assert len(events) > 0
+    assert (res.loads <= 30 + 1e-9).all()

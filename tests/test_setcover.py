@@ -5,10 +5,7 @@ import itertools
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:  # offline container: vendored deterministic fallback
-    from _hypothesis_stub import given, settings, strategies as st
+from _pbt import given, settings, st
 
 from repro.core.setcover import (
     Placement, cover_for_query, greedy_set_cover, query_span,

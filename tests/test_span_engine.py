@@ -6,10 +6,7 @@ attribution, same unplaced-item error)."""
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:  # offline container: vendored deterministic fallback
-    from _hypothesis_stub import given, settings, strategies as st
+from _pbt import given, settings, st
 
 from repro import flags
 from repro.core.hypergraph import Hypergraph

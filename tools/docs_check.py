@@ -35,14 +35,18 @@ from repro import flags  # noqa: E402
 
 FLAG_PREFIXES = ("span_", "lmbr_", "mla_", "moe_", "accum_", "sp_",
                  "router_", "drift_", "scale_", "placement_", "durability_",
-                 "node_")
+                 "node_", "migration_")
 # flag-prefixed identifiers that are NOT flags (kernel / bench row names,
 # serving counters, profile columns, API parameters)
 NON_FLAGS = {"span_gain", "span_gain_calibration", "span_gain_ref",
              "span_gain_tile", "span_round_calibration", "drift_fires",
              "node_weights", "node_cost", "placement_seconds",
              "placement_stats", "durability_copies", "durability_eps=0",
-             "placement_s", "placement_applications", "span_ratio"}
+             "placement_s", "placement_applications", "span_ratio",
+             "span_regret",
+             "migration_copies", "migration_drops", "migration_ticks",
+             "migration_done", "migration_transfer_gb",
+             "migration_wasted_gb", "migration_max_inflight_gb"}
 # backticked tokens that should parse as --variant specs
 VARIANT_RE = re.compile(
     r"^(baseline|mla_decomp|sp2?|accum\d+|cf[\d.]+|spanth\d+|peelth\d+|"
@@ -52,6 +56,7 @@ VARIANT_RE = re.compile(
     r"lmbrcache[01]|lmbrepoch(item|partition)|"
     r"routerbal[01]|routermb\d+|routereps[\d.]+|"
     r"driftw\d+|driftth[\d.]+|shards\d+|scalew\d+|brepair\d+|"
+    r"migbw[\d.]+|migconc\d+|mighead[\d.]+|"
     r"energy|durab[\d.e+-]+|nodecost[\d.]+|routercost[01])"
     r"(\+.+)?$"
 )
