@@ -261,7 +261,10 @@ class Simulator:
             the union layout, old replicas dropped only after every new
             copy of their item has landed.  Down/up events interact: a dead
             transfer destination holds its copies (and the drops waiting on
-            them) until it returns.
+            them) until it returns, and a paced migration may START during
+            an outage — the diff is taken against the post-restore layout
+            and the already-down partitions' copies and drops defer until
+            their rows come back.
 
         Passing a `PlacementService` as ``service`` arms the drift detector:
         after each microbatch the windowed avg span is compared against the
@@ -353,8 +356,13 @@ class Simulator:
                 mplan = target
             else:
                 member = getattr(target, "member", target)
+                # diff against the post-restore view: a down partition's
+                # saved row comes back verbatim on 'up', so its stale
+                # replicas need scheduled (deferred) drops, not silence
+                old = (failover.restored_member()
+                       if failover.down_partitions else live.member)
                 mplan = plan_migration(
-                    live.member, member, node_weights=live.node_weights,
+                    old, member, node_weights=live.node_weights,
                 )
             mig_totals["migrations"] += 1
             if mplan.bandwidth <= 0 or mplan.is_noop:
@@ -380,7 +388,11 @@ class Simulator:
                 if detector is not None:
                     detector.plan.member = live.member
             else:
-                migrator = MigrationExecutor(mplan, live)
+                # partitions already down at migration start are seeded so
+                # their copies/drops defer exactly like mid-flight failures
+                migrator = MigrationExecutor(
+                    mplan, live, down=failover.down_partitions
+                )
 
         def _repair_workload() -> Hypergraph:
             # repair against the live window when the sketch has traffic,

@@ -82,6 +82,17 @@ class FailoverManager:
     def down_partitions(self) -> list[int]:
         return sorted(self._saved)
 
+    def restored_member(self) -> np.ndarray:
+        """The member matrix as it will read once every down partition's
+        saved row is restored by `partition_up` (a copy; the live matrix is
+        untouched).  Migration planning diffs against this view so a down
+        partition's stale replicas get scheduled (deferred) drops instead
+        of silently surviving the row restore."""
+        m = self.pl.member.copy()
+        for p, row in self._saved.items():
+            m[p] = row
+        return m
+
     def rebase(self, placement: Placement) -> None:
         """Adopt a hot-swapped live placement (drift refit).
 

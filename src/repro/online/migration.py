@@ -36,7 +36,13 @@ copy re-queues at the head of the schedule), copies already landed there
 are masked with the row and counted un-landed again, and the drops waiting
 on them are deferred — old replicas are retained until the destination
 recovers, so the union layout keeps serving through the outage and the
-migration completes to the exact target once the partition returns.
+migration completes to the exact target once the partition returns.  A
+migration may also START during an outage: the constructor's ``down``
+argument seeds the already-dead partitions so their copies and drops are
+deferred from tick zero exactly like a mid-flight failure (the plan should
+be diffed against the post-restore layout — see
+`FailoverManager.restored_member` — so the dead partition's stale replicas
+get scheduled drops instead of silently surviving the row restore).
 """
 
 from __future__ import annotations
@@ -342,12 +348,19 @@ class MigrationExecutor:
 
     ``refresh_loads`` must be called after any external mutation of the
     member matrix (failover repair); down/up notifications refresh
-    implicitly.  A migration that can make no progress with nothing down
-    raises RuntimeError (headroom too tight: every pending copy is blocked
-    on space only drops can free, and every drop waits on a blocked copy).
+    implicitly.  ``down`` seeds partitions that are ALREADY down at
+    migration start (their member rows masked by the caller): copies
+    to/from them are deferred exactly like a mid-flight failure and
+    `on_partition_up` re-arms them once the row is restored.  A migration
+    that can make no progress with nothing down raises RuntimeError, naming
+    the cause: a pending copy whose item no live partition holds (the plan
+    only validates coverage of the TARGET layout), or headroom too tight
+    (every pending copy is blocked on space only drops can free, and every
+    drop waits on a blocked copy).
     """
 
-    def __init__(self, plan: MigrationPlan, placement: Placement):
+    def __init__(self, plan: MigrationPlan, placement: Placement,
+                 down=()):
         if placement.member.shape != (plan.num_partitions, plan.num_items):
             raise ValueError(
                 f"placement shape {placement.member.shape} does not match "
@@ -382,7 +395,7 @@ class MigrationExecutor:
             j for v, js in sorted(self._drops_of.items())
             if self._unlanded[v] == 0 for j in js
         ]
-        self._down: set[int] = set()
+        self._down: set[int] = {int(p) for p in down}
         self._base_load = placement.partition_weights()
         self._reserved = np.zeros(plan.num_partitions, dtype=np.float64)
         self._inflight = 0.0
@@ -468,11 +481,12 @@ class MigrationExecutor:
     # ----------------------------------------------------------------- tick
     def advance(self, nticks: int) -> None:
         """Advance serving time by ``nticks`` queries, progressing transfers
-        at ``bandwidth`` weight-units per tick."""
+        at ``bandwidth`` weight-units per tick.  Returns as soon as the
+        migration is done — ``now`` stops at the completing tick, so it
+        reads as the actual migration duration."""
         for _ in range(int(nticks)):
             if self.done:
-                self.now += 1
-                continue
+                return
             self._step()
 
     def _step(self) -> None:
@@ -484,6 +498,19 @@ class MigrationExecutor:
                 not started and not self._active and self._pending
                 and not self._down and not self._ready_drops
             ):
+                no_src = sorted({
+                    int(self.plan.copy_item[idx]) for idx in self._pending
+                    if self._pick_source(int(self.plan.copy_item[idx])) < 0
+                })
+                if no_src:
+                    raise RuntimeError(
+                        f"migration stalled at tick {self.now}: "
+                        f"{len(no_src)} pending items have no live source "
+                        f"replica to copy from (e.g. {no_src[:5]}) — "
+                        f"plan_migration only validates coverage of the "
+                        f"target layout; the live layout must hold every "
+                        f"item being copied"
+                    )
                 raise RuntimeError(
                     f"migration stalled at tick {self.now}: "
                     f"{len(self._pending)} pending copies are blocked and "

@@ -242,6 +242,63 @@ def test_stalled_migration_raises():
     assert ex2.done and np.array_equal(live.member, new)
 
 
+def test_stalled_no_source_raises():
+    """A pending copy of an item that NO live partition holds (the plan
+    only validates coverage of the target layout) must stall with a
+    diagnostic naming the missing source, not blame headroom."""
+    old = np.array([[True, False]])
+    new = np.array([[True, True]])
+    mp = plan_migration(old, new, bandwidth=5.0, headroom=0.0)
+    ex = MigrationExecutor(mp, Placement(old.copy(), 5.0, np.ones(2)))
+    with pytest.raises(RuntimeError, match="no live source"):
+        ex.advance(5)
+
+
+def test_advance_stops_counting_after_done(plans):
+    """`now` freezes at the completing tick: ticks past the end of the
+    migration must not inflate the reported duration."""
+    mp = _paced_plan(plans)
+    ex = MigrationExecutor(mp, _fresh_old(plans))
+    guard = 0
+    while not ex.done:
+        ex.advance(1)
+        guard += 1
+        assert guard < 100_000
+    end = ex.now
+    ex.advance(100)
+    assert ex.now == end
+
+
+def test_executor_seeded_down_completes_after_restore(plans):
+    """The migration STARTS while a copy destination is already down.
+    Seeded at construction, the executor never sets a member bit on the
+    masked row, cannot finish while the destination is dark, and after the
+    row restore lands bit-identical with the target."""
+    _, pa, pb = plans
+    d = diff_plans(pa.member, pb.member)
+    dead = int(d.copy_dest[0])
+    live = _fresh_old(plans)
+    saved = live.member[dead].copy()
+    live.member[dead] = False  # failover.partition_down already ran
+    # the plan diffs against the post-restore layout (saved row included)
+    mp = plan_migration(pa.member, pb.member, node_weights=pa.node_weights,
+                        bandwidth=4.0, concurrency=3, headroom=0.25)
+    ex = MigrationExecutor(mp, live, down=[dead])
+    ex.advance(200)
+    assert not live.member[dead].any(), "wrote a member bit on a dead row"
+    assert not ex.done, "cannot finish while a copy destination is down"
+    live.member[dead] = saved  # failover.partition_up restores the row
+    ex.on_partition_up(dead)
+    guard = 0
+    while not ex.done:
+        ex.advance(16)
+        guard += 1
+        assert guard < 10_000
+    assert np.array_equal(live.member, pb.member)
+    assert ex.stats["copies_done"] == mp.num_copies
+    assert ex.stats["drops_done"] == mp.num_drops
+
+
 def test_mid_migration_destination_failure(plans):
     """Kill a transfer destination mid-flight: its in-flight transfers
     abort (bytes wasted), landed copies are counted un-landed while masked,
@@ -417,6 +474,33 @@ def test_run_online_instant_migrate_during_outage_raises(plans):
         sim.run_online(hg, _old_algo(plans), events=[
             (10, "down", dead), (50, "migrate", tgt),
         ])
+
+
+def test_run_online_down_then_paced_migrate_then_up(plans):
+    """A paced migration issued DURING an outage: the diff is taken against
+    the post-restore layout, copies/drops on the dead partition defer until
+    its row returns, and the run lands exactly on the target (auto_repair
+    off, so no extra replicas blur the bit-identity check)."""
+    hg, pa, pb = plans
+    mp = plan_migration(pa.member, pb.member, node_weights=pa.node_weights)
+    dead = int(mp.copy_dest[0])
+    sim = Simulator(10, 32)
+    tgt = PlacementPlan(pb.member.copy(), 32.0, pb.node_weights, "lmbr")
+    flags.set_variant("migbw6.0+mighead0.25")
+    try:
+        res = sim.run_online(
+            hg, _old_algo(plans), auto_repair=False,
+            events=[(10, "down", dead), (50, "migrate", tgt),
+                    (220, "up", dead)],
+        )
+    finally:
+        flags.reset()
+    s = res.online_stats
+    assert s["migrations"] == 1 and s["migration_done"]
+    assert s["migration_copies"] == mp.num_copies
+    assert s["migration_drops"] == mp.num_drops
+    assert s["served_queries"] + s["degraded_queries"] == hg.num_edges
+    assert np.array_equal(res.loads, _target_loads(pb))
 
 
 def test_run_online_migration_through_failover(plans):
