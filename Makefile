@@ -34,7 +34,7 @@ test-migration:
 # are copied to the repo root as the committed baselines (results/ is
 # gitignored scratch)
 bench-smoke:
-	$(PY) -m benchmarks.run --only bench_spans,bench_lmbr,bench_online,bench_migration,bench_scale,bench_energy
+	$(PY) -m benchmarks.run --only bench_spans,bench_lmbr,bench_online,bench_migration,bench_scale,bench_energy,bench_obs
 	cp benchmarks/results/BENCH_*.json .
 
 # full quick benchmark suite (all paper figures, single seed)

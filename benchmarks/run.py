@@ -26,6 +26,7 @@ SECTIONS = [
     ("bench_migration", "live migration: paced full plan swap vs instant"),
     ("bench_scale", "cluster-scale: streaming ingestion, sharded parallel fits"),
     ("bench_energy", "heterogeneous cluster: energy objective, durability"),
+    ("bench_obs", "observability: off/counters/trace identity + overhead"),
     ("placement_applications", "framework: MoE experts / shards / checkpoints"),
     ("kernel_bench", "Pallas kernels vs jnp oracles (CPU interpret)"),
     ("roofline_table", "roofline terms from dry-run artifacts"),

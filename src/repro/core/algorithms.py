@@ -16,11 +16,13 @@ greedy set cover (replica selection).
 from __future__ import annotations
 
 import heapq
+import time
 from typing import Callable
 
 import numpy as np
 
 from .. import flags as _flags
+from .. import obs as _obs
 from . import hpa as hpa_mod
 from .cluster import capacity_vector, normalize_capacity
 from .hypergraph import Hypergraph
@@ -703,6 +705,10 @@ class _LMBRState:
                 peel_list.append(p)
             if peel_list:
                 self.stats["peel_pairs"] += len(peel_list)
+                reg = _obs.registry()
+                if reg.active:
+                    reg.inc("lmbr_peel_rounds")
+                    reg.inc("lmbr_peel_pairs", len(peel_list))
                 peeled = self._peel_with_traj(peel_list, backend)
                 for p in peel_list:
                     k = p[0]
@@ -1355,6 +1361,8 @@ def lmbr(
     gain-cache setting (``flags.FLAGS["lmbr_gain_cache"]``).  The fitted
     ``Placement`` carries the move-engine counters in ``.stats`` (moves,
     gain_calls, gain_cache_hits, peel backend)."""
+    _tr = _obs.tracer()
+    _t0 = time.perf_counter() if _tr.active else 0.0
     energy_mask: np.ndarray | None = None
     if initial is not None:
         pl = Placement(
@@ -1488,6 +1496,16 @@ def lmbr(
         cache_hit_rate=(hits / calls) if calls else 0.0,
         cover_engine={k: eng1[k] - eng0[k] for k in eng0},
     )
+    reg = _obs.registry()
+    if reg.active:
+        # mirror the move-engine counters into the registry; misses are
+        # derivable as lmbr_gain_calls - hits
+        for k in ("moves", "gain_calls", "gain_cache_hits", "gain_fp_hits"):
+            reg.inc("lmbr_" + k, state.stats[k])
+    if _tr.active:
+        _tr.complete("fit.lmbr", _t0, time.perf_counter(), n=n,
+                     moves=state.stats["moves"],
+                     gain_calls=state.stats["gain_calls"])
     return pl
 
 

@@ -20,10 +20,12 @@ from __future__ import annotations
 
 import contextlib
 import hashlib
+import time
 from collections import OrderedDict
 
 import numpy as np
 
+from .. import obs as _obs
 from .hypergraph import Hypergraph
 
 __all__ = ["partition", "connectivity_cost", "ubfactor", "fresh_partition_cache"]
@@ -488,10 +490,13 @@ def partition(
         _PARTITION_CACHE.move_to_end(key)
         return cached.copy()
 
+    _tr = _obs.tracer()
+    _t0 = time.perf_counter() if _tr.active else 0.0
     best_assign, best_cost = None, np.inf
     for run in range(max(1, nruns)):
         rng = np.random.default_rng(seed + 7919 * run)
         # ---- coarsening phase
+        _tc = time.perf_counter() if _tr.active else 0.0
         levels: list[tuple[Hypergraph, np.ndarray]] = []
         cur = hg
         # heterogeneous capacities coarsen against the tightest part: no
@@ -504,7 +509,11 @@ def partition(
                 break  # diminishing returns
             levels.append((cur, cmap))
             cur = coarse
+        if _tr.active:
+            _tr.complete("fit.hpa.coarsen", _tc, time.perf_counter(),
+                         run=run, levels=len(levels), coarse_n=cur.num_nodes)
         # ---- initial partition on coarsest graph
+        _tc = time.perf_counter() if _tr.active else 0.0
         assign = _initial_partition(cur, k, capacity, rng)
         assign = _refine(cur, assign, k, capacity, rng, passes)
         # ---- uncoarsen + refine
@@ -512,10 +521,15 @@ def partition(
             assign = assign[cmap]
             assign = _refine(fine, assign, k, capacity, rng, passes)
         assign = _fixup_capacity(hg, assign, k, capacity)
+        if _tr.active:
+            _tr.complete("fit.hpa.refine", _tc, time.perf_counter(), run=run)
         cost = connectivity_cost(hg, assign, k)
         if cost < best_cost:
             best_cost, best_assign = cost, assign.copy()
     _PARTITION_CACHE[key] = best_assign.copy()
     if len(_PARTITION_CACHE) > _PARTITION_CACHE_MAX:
         _PARTITION_CACHE.popitem(last=False)
+    if _tr.active:
+        _tr.complete("fit.hpa", _t0, time.perf_counter(), k=k,
+                     n=n, nruns=nruns)
     return best_assign

@@ -31,6 +31,7 @@ from typing import Sequence
 import numpy as np
 
 from .. import flags as _flags
+from .. import obs as _obs
 from .algorithms import ALGORITHMS, lmbr, min_partitions
 from .cluster import (
     NodeProfile,
@@ -217,6 +218,7 @@ class PlacementService:
         validate_durability(pl, prof, eps)
         if pl.stats is not None:
             pl.stats["durability_copies"] = int(len(touched))
+        _obs.registry().inc("durability_copies_total", len(touched))
 
     # ------------------------------------------------------------------ fit
     def fit(
@@ -245,8 +247,10 @@ class PlacementService:
             # the LMBR engine's optional access-cost penalty; other
             # algorithms swallow the kwarg
             algo_kwargs["node_cost"] = profile.access_cost
-        pl = fn(hg, num_partitions, capacity, seed=self.seed,
-                nruns=self.nruns, **algo_kwargs)
+        with _obs.tracer().span("service.fit", algorithm=self.algorithm,
+                                n=num_partitions):
+            pl = fn(hg, num_partitions, capacity, seed=self.seed,
+                    nruns=self.nruns, **algo_kwargs)
         pl.validate()
         self._apply_durability(
             pl, profile, num_partitions, capacity, durability_eps
@@ -301,11 +305,14 @@ class PlacementService:
                 workload, num_nodes=num_items,
                 node_weights=node_weights, edge_weights=query_weights,
             )
-        res = fit_sharded_placement(
-            hg, num_partitions, capacity, algorithm=self.algorithm,
-            seed=self.seed, nruns=self.nruns, num_shards=num_shards,
-            workers=workers, boundary_repair=boundary_repair, **algo_kwargs,
-        )
+        with _obs.tracer().span("service.fit_sharded",
+                                algorithm=self.algorithm, n=num_partitions):
+            res = fit_sharded_placement(
+                hg, num_partitions, capacity, algorithm=self.algorithm,
+                seed=self.seed, nruns=self.nruns, num_shards=num_shards,
+                workers=workers, boundary_repair=boundary_repair,
+                **algo_kwargs,
+            )
         res.placement.validate()
         self._apply_durability(
             res.placement, profile, num_partitions, capacity, durability_eps
@@ -393,12 +400,13 @@ class PlacementService:
             queries, num_nodes=plan.member.shape[1],
             node_weights=plan.node_weights,
         )
-        pl = lmbr(
-            hg, plan.num_partitions, plan.capacity,
-            seed=self.seed, initial=plan.as_placement(), max_moves=max_moves,
-            dest_mask=dest_mask,
-            node_cost=profile.access_cost if profile is not None else None,
-        )
+        with _obs.tracer().span("service.refit", max_moves=max_moves):
+            pl = lmbr(
+                hg, plan.num_partitions, plan.capacity,
+                seed=self.seed, initial=plan.as_placement(),
+                max_moves=max_moves, dest_mask=dest_mask,
+                node_cost=profile.access_cost if profile is not None else None,
+            )
         pl.validate()
         new_plan = PlacementPlan(
             pl.member, plan.capacity, plan.node_weights,

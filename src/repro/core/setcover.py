@@ -45,6 +45,7 @@ import dataclasses
 import numpy as np
 
 from .. import flags as _flags
+from .. import obs as _obs
 from .cluster import normalize_capacity
 
 __all__ = [
@@ -354,6 +355,12 @@ def _round_loop_fn(B: int, N: int, W2: int, Rmax: int):
     fn = _ROUND_LOOPS.get(key)
     if fn is not None:
         return fn
+    reg = _obs.registry()
+    if reg.active:
+        # a compile-cache miss IS a jit retrace, keyed by batch-shape class
+        reg.inc("jit_retraces", shape=f"B{B}.N{N}.W{W2}.R{Rmax}")
+        _obs.tracer().event("jit.retrace", kernel="cover_round_loop",
+                            B=B, N=N, W=W2, Rmax=Rmax)
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -506,6 +513,10 @@ def _cover_bucket(edge_ptr, edge_nodes, member, b_idx, W, spans, pin_parts):
     if ch is not None:
         ENGINE_COUNTERS["device_buckets"] += 1
         ENGINE_COUNTERS["device_rounds"] += ch.shape[1]
+        reg = _obs.registry()
+        if reg.active:
+            reg.inc("cover_buckets", backend="device")
+            reg.inc("cover_rounds", ch.shape[1], backend="device")
         spans[b_idx] = (ch >= 0).sum(axis=1)
         _attribute_pins(ch, member, b_idx, edge_ptr, pin_e, pos, pins,
                         pin_parts)
@@ -564,6 +575,10 @@ def _cover_bucket(edge_ptr, edge_nodes, member, b_idx, W, spans, pin_parts):
         ch[ai, r] = pi
     ENGINE_COUNTERS["host_buckets"] += 1
     ENGINE_COUNTERS["host_rounds"] += R
+    reg = _obs.registry()
+    if reg.active:
+        reg.inc("cover_buckets", backend="host")
+        reg.inc("cover_rounds", R, backend="host")
     spans[b_idx] = (ch >= 0).sum(axis=1)
     _attribute_pins(ch, member, b_idx, edge_ptr, pin_e, pos, pins, pin_parts)
     return ch

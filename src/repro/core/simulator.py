@@ -25,11 +25,11 @@ drops from ~20 to ~3 (validated in benchmarks/energy_model.py).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable
 
 import numpy as np
 
+from .. import obs as _obs
 from . import hpa as hpa_mod
 from .cluster import (
     DEFAULT_POWER_ACTIVE, DEFAULT_POWER_IDLE, NodeProfile, normalize_capacity,
@@ -181,20 +181,23 @@ class Simulator:
     ) -> SimulationResult:
         """Fit `algorithm` on workload `hg`, then replay `trace` (defaults to
         the training workload itself — the paper replays the same trace)."""
+        algo_name = name or getattr(algorithm, "__name__", "custom")
         # fresh partition memo per run: each algorithm pays for its own
         # hpa.partition work, so placement_seconds is run-order independent
         with hpa_mod.fresh_partition_cache():
-            t0 = time.perf_counter()
-            pl = algorithm(hg, self.n, self.capacity, **algo_kwargs)
-            dt = time.perf_counter() - t0
+            with _obs.timed("fit.place", algorithm=algo_name) as _t:
+                pl = algorithm(hg, self.n, self.capacity, **algo_kwargs)
+            dt = _t.seconds
         if validate:
             pl.validate()
         replay = trace if trace is not None else hg
         # one batched greedy cover for the whole trace (replica selection for
         # every query at once); pin_parts is the per-item serving partition
-        cov = batched_cover_csr(
-            replay.edge_ptr, replay.edge_nodes, pl.member, with_pin_parts=True
-        )
+        with _obs.tracer().span("replay.cover", queries=replay.num_edges):
+            cov = batched_cover_csr(
+                replay.edge_ptr, replay.edge_nodes, pl.member,
+                with_pin_parts=True,
+            )
         spans = cov.spans
         access_load = np.bincount(
             cov.cover_parts, minlength=self.n
@@ -210,7 +213,7 @@ class Simulator:
         )
         loads = pl.partition_weights()
         return SimulationResult(
-            algorithm=name or getattr(algorithm, "__name__", "custom"),
+            algorithm=algo_name,
             spans=spans,
             loads=loads,
             access_load=access_load,
@@ -287,14 +290,14 @@ class Simulator:
         from .placement_service import PlacementPlan
         from .setcover import batched_spans_csr
 
+        algo_name = name or getattr(algorithm, "__name__", "custom")
         with hpa_mod.fresh_partition_cache():
-            t0 = time.perf_counter()
-            pl = algorithm(hg, self.n, self.capacity, **algo_kwargs)
-            dt = time.perf_counter() - t0
+            with _obs.timed("fit.place", algorithm=algo_name) as _t:
+                pl = algorithm(hg, self.n, self.capacity, **algo_kwargs)
+            dt = _t.seconds
         if validate:
             pl.validate()
         replay = trace if trace is not None else hg
-        algo_name = name or getattr(algorithm, "__name__", "custom")
         # the live layout: plan, router and failover manager SHARE the
         # member matrix, so masking/repair is visible to the next microbatch
         live = Placement(pl.member, self.capacity, pl.node_weights)
@@ -327,8 +330,8 @@ class Simulator:
             migration_ticks += ex.now
             mig_totals["migration_copies"] += ex.stats["copies_done"]
             mig_totals["migration_drops"] += ex.stats["drops_done"]
-            mig_totals["transferred"] += ex.stats["transferred"]
-            mig_totals["wasted"] += ex.stats["wasted"]
+            mig_totals["transferred"] += ex.stats["migration_transferred"]
+            mig_totals["wasted"] += ex.stats["migration_wasted"]
             mig_totals["max_inflight"] = max(
                 mig_totals["max_inflight"], ex.stats["max_inflight"]
             )
@@ -393,6 +396,10 @@ class Simulator:
                 migrator = MigrationExecutor(
                     mplan, live, down=failover.down_partitions
                 )
+                _obs.tracer().event(
+                    "migration.start", copies=mplan.num_copies,
+                    drops=mplan.num_drops,
+                )
 
         def _repair_workload() -> Hypergraph:
             # repair against the live window when the sketch has traffic,
@@ -438,6 +445,30 @@ class Simulator:
         spans_parts: list[np.ndarray] = []
         total_energy = 0.0
         total_shipped = 0.0
+
+        # periodic metrics snapshot every obs_snapshot_every served queries
+        # (registry gauges always; a Chrome-trace counter event when tracing)
+        snap_every = int(_flags.FLAGS.get("obs_snapshot_every", 0))
+        _reg = _obs.registry()
+        next_snap = snap_every if (snap_every > 0 and _reg.active) else 0
+
+        def _emit_snapshot() -> None:
+            served = int(router.stats["served_queries"])
+            _reg.set("online_served_queries", served)
+            _reg.set("online_degraded_queries", degraded)
+            _reg.gauge_vector("online_partition_load").set(router.load.copy())
+            inflight = (migrator.inflight_bytes if migrator is not None
+                        else 0.0)
+            _reg.set("migration_inflight", inflight)
+            tr = _obs.tracer()
+            if tr.active:
+                tr.counter(
+                    "online.snapshot", served=served, degraded=degraded,
+                    migration_inflight=inflight,
+                    windowed_avg_span=(detector.windowed_avg_span
+                                       if detector is not None else 0.0),
+                )
+
         while pos < nq:
             while ev_i < len(ev) and ev[ev_i][0] <= pos:
                 _apply(ev[ev_i][1], ev[ev_i][2])
@@ -509,6 +540,10 @@ class Simulator:
                         router.swap_plan(new_plan.member)
                         live = new_plan.as_placement()
                         failover.rebase(live)
+            if next_snap and router.stats["served_queries"] >= next_snap:
+                _emit_snapshot()
+                while next_snap <= router.stats["served_queries"]:
+                    next_snap += snap_every
             pos = stop
         while ev_i < len(ev):  # events scheduled at/after the trace end
             _apply(ev[ev_i][1], ev[ev_i][2])

@@ -186,6 +186,18 @@ FLAGS = {
     # a diff whose copies all wait on drops raises RuntimeError instead of
     # deadlocking silently.
     "migration_headroom": 0.10,
+    # observability level (repro.obs).  "off" (default) swaps in the no-op
+    # null registry/tracer — zero allocations on hot paths, bit-identical
+    # and timing-neutral (gated by benchmarks/bench_obs.py).  "counters"
+    # turns on the metrics registry (counters/gauges/histograms, Prometheus
+    # exposition via to_prom_text); "trace" additionally records nested
+    # spans/events as Chrome-trace JSON (to_chrome_trace).  No level may
+    # change results: hooks only observe.
+    "obs_level": "off",
+    # run_online: emit a periodic metrics snapshot (registry gauges + a
+    # Chrome-trace counter event when tracing) every N served queries.
+    # 0 (default) disables periodic snapshots.
+    "obs_snapshot_every": 0,
 }
 
 
@@ -291,6 +303,16 @@ def set_variant(spec: str):
             if head < 0:
                 raise ValueError(f"migration_headroom must be >= 0, got {head}")
             FLAGS["migration_headroom"] = head
+        elif part.startswith("obssnap"):
+            every = int(part[len("obssnap"):])
+            if every < 0:
+                raise ValueError(f"obs_snapshot_every must be >= 0, got {every}")
+            FLAGS["obs_snapshot_every"] = every
+        elif part.startswith("obs"):
+            lv = part[len("obs"):]
+            if lv not in ("off", "counters", "trace"):
+                raise ValueError(f"unknown obs level {lv!r}")
+            FLAGS["obs_level"] = lv
         elif part.startswith("span"):
             backend = part[len("span"):]
             if backend not in ("auto", "numpy", "jax", "pallas"):
@@ -313,4 +335,5 @@ def reset():
                  scale_boundary_repair=256, placement_objective="span",
                  durability_eps=0.0, node_cost_weight=0.0,
                  router_cost_aware=False, migration_bandwidth=0.0,
-                 migration_concurrency=4, migration_headroom=0.10)
+                 migration_concurrency=4, migration_headroom=0.10,
+                 obs_level="off", obs_snapshot_every=0)

@@ -1,0 +1,98 @@
+"""repro.obs — unified observability: metrics registry + structured tracer.
+
+Level selection is flag-driven and re-read on every accessor call, so code
+never caches the wrong object across a ``flags.set_variant``:
+
+* ``flags.FLAGS["obs_level"] == "off"``      -> ``registry()`` is
+  ``NULL_REGISTRY``, ``tracer()`` is ``NULL_TRACER`` (both no-op
+  singletons; zero allocations on hot paths).
+* ``"counters"``                              -> real ``Registry``, null
+  tracer.
+* ``"trace"``                                 -> real ``Registry`` + real
+  ``Tracer``.
+
+The contract (gated by tests/test_obs.py and benchmarks/bench_obs.py): no
+observability level may change placement or serving RESULTS — hooks only
+read state — and ``"off"`` must be timing-neutral on the serving loop.
+
+``timed(name, **args)`` is the repo-wide timing idiom replacing scattered
+``time.perf_counter()`` pairs: it always measures (``.seconds`` is valid
+at every obs level, so ``fit_seconds``-style stats keep their values) and
+additionally records a trace span when ``obs_level == "trace"``.
+"""
+
+from __future__ import annotations
+
+import time
+
+from .. import flags as _flags
+from .registry import (Registry, NullRegistry, NULL_REGISTRY,
+                       DEFAULT_BUCKETS, parse_prom_text)
+from .trace import Tracer, NullTracer, NULL_TRACER, NULL_SPAN
+
+__all__ = [
+    "Registry", "NullRegistry", "NULL_REGISTRY", "DEFAULT_BUCKETS",
+    "parse_prom_text", "Tracer", "NullTracer", "NULL_TRACER", "NULL_SPAN",
+    "level", "registry", "tracer", "reset", "timed",
+]
+
+LEVELS = ("off", "counters", "trace")
+
+_REGISTRY = Registry()
+_TRACER = Tracer()
+
+
+def level() -> str:
+    """Current ``obs_level`` flag value (validated)."""
+    lv = _flags.FLAGS.get("obs_level", "off")
+    if lv not in LEVELS:
+        raise ValueError(f"unknown obs_level {lv!r}; expected one of {LEVELS}")
+    return lv
+
+
+def registry():
+    """The live ``Registry`` at "counters"/"trace", else ``NULL_REGISTRY``."""
+    return NULL_REGISTRY if _flags.FLAGS.get("obs_level", "off") == "off" \
+        else _REGISTRY
+
+
+def tracer():
+    """The live ``Tracer`` at "trace", else ``NULL_TRACER``."""
+    return _TRACER if _flags.FLAGS.get("obs_level", "off") == "trace" \
+        else NULL_TRACER
+
+
+def reset():
+    """Drop all recorded metrics and trace events (flags are untouched)."""
+    _REGISTRY.clear()
+    _TRACER.clear()
+
+
+class timed:
+    """Always-on timing context manager; trace span when tracing.
+
+    ``with obs.timed("fit.place", algorithm="lmbr") as t: ...`` then read
+    ``t.seconds``.  Replaces bare ``time.perf_counter()`` pairs so stats
+    like ``fit_seconds`` keep identical values at every obs level while
+    the same region shows up in the Chrome trace when enabled.
+    """
+
+    __slots__ = ("name", "args", "t0", "seconds")
+
+    def __init__(self, name: str, **args):
+        self.name = name
+        self.args = args
+        self.t0 = 0.0
+        self.seconds = 0.0
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        t1 = time.perf_counter()
+        self.seconds = t1 - self.t0
+        tr = tracer()
+        if tr.active:
+            tr.complete(self.name, self.t0, t1, **self.args)
+        return False

@@ -26,6 +26,7 @@ from collections import deque
 import numpy as np
 
 from .. import flags as _flags
+from .. import obs as _obs
 from ..core.hypergraph import Hypergraph
 from ..core.placement_service import PlacementPlan, PlacementService
 
@@ -157,6 +158,13 @@ class DriftDetector:
         fired = self.windowed_avg_span > self.baseline * self.threshold
         if fired:
             self.stats["drift_fires"] += 1
+            reg = _obs.registry()
+            if reg.active:
+                reg.inc("drift_fires_total")
+                _obs.tracer().event(
+                    "drift.fire", windowed=self.windowed_avg_span,
+                    baseline=self.baseline, threshold=self.threshold,
+                )
         return fired
 
     def refit(self, dest_mask: np.ndarray | None = None) -> PlacementPlan:
@@ -170,12 +178,14 @@ class DriftDetector:
         (the down rows of ``self.plan.member`` are already masked, since the
         plan shares the live membership matrix)."""
         window = self.sketch.window_queries()
-        new_plan = self.service.refit(
-            self.plan, window, max_moves=self.refit_moves,
-            dest_mask=dest_mask,
-        )
+        with _obs.tracer().span("drift.refit", window=len(window)):
+            new_plan = self.service.refit(
+                self.plan, window, max_moves=self.refit_moves,
+                dest_mask=dest_mask,
+            )
         self.plan = new_plan
         self.stats["refits"] += 1
+        _obs.registry().inc("drift_refits_total")
         self._span_window.clear()
         self.baseline = float(new_plan.avg_span(window))
         return new_plan

@@ -40,8 +40,11 @@ next router microbatch):
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
+from .. import obs as _obs
 from ..core.cluster import NodeProfile
 from ..core.hypergraph import Hypergraph
 from ..core.setcover import Placement
@@ -127,6 +130,11 @@ class FailoverManager:
         self.pl.member[p] = False
         self._loads[p] = 0.0
         self.stats["partitions_down"] += 1
+        reg = _obs.registry()
+        if reg.active:
+            reg.inc("failover_partitions_down_total")
+            reg.gauge("failover_down_now").add(1.0)
+            _obs.tracer().event("failover.down", partition=p)
         lost = (
             self._saved[p]
             & ~self.pl.member.any(axis=0)
@@ -142,6 +150,10 @@ class FailoverManager:
         row = self._saved.pop(p)
         self.pl.member[p] = row
         self._loads[p] = float(self.pl.node_weights[row].sum())
+        reg = _obs.registry()
+        if reg.active:
+            reg.gauge("failover_down_now").add(-1.0)
+            _obs.tracer().event("failover.up", partition=p)
 
     # ---------------------------------------------------------------- audit
     def uncovered_items(self) -> np.ndarray:
@@ -300,6 +312,8 @@ class FailoverManager:
         an item that just received a copy), so the placements — order,
         destinations, float ties — are bit-identical to `repair_reference`.
         """
+        _tr = _obs.tracer()
+        _t0 = time.perf_counter() if _tr.active else 0.0
         pl = self.pl
         live_rows = np.ones(pl.num_partitions, dtype=bool)
         live_rows[self.down_partitions] = False
@@ -329,6 +343,12 @@ class FailoverManager:
                 i += 1
             pos += max(i, 1)
         self.stats["repaired_items"] += len(repaired)
+        reg = _obs.registry()
+        if reg.active:
+            reg.inc("failover_repaired_items_total", len(repaired))
+        if _tr.active:
+            _tr.complete("failover.repair", _t0, time.perf_counter(),
+                         copies=len(repaired))
         return np.asarray(sorted(set(repaired)), dtype=np.int64)
 
     def repair_reference(self, hg: Hypergraph, k: int = 1,

@@ -49,10 +49,12 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import time
 
 import numpy as np
 
 from .. import flags as _flags
+from .. import obs as _obs
 from ..core.setcover import Placement
 
 __all__ = [
@@ -320,16 +322,19 @@ class TransferEvent:
 class _Transfer:
     """An in-flight copy: schedule index, remaining volume, live source."""
 
-    __slots__ = ("idx", "dest", "item", "src", "size", "remaining")
+    __slots__ = ("idx", "dest", "item", "src", "size", "remaining",
+                 "t0", "tick0")
 
     def __init__(self, idx: int, dest: int, item: int, src: int,
-                 size: float):
+                 size: float, t0: float = 0.0, tick0: int = 0):
         self.idx = idx
         self.dest = dest
         self.item = item
         self.src = src
         self.size = size
         self.remaining = size
+        self.t0 = t0        # perf_counter at start (trace mode only)
+        self.tick0 = tick0  # executor tick at start
 
 
 class MigrationExecutor:
@@ -401,8 +406,13 @@ class MigrationExecutor:
         self._inflight = 0.0
         self._dirty = True  # attempt starts on the next tick
         self.stats = dict(
-            copies_done=0, drops_done=0, transferred=0.0, wasted=0.0,
+            copies_done=0, drops_done=0,
+            migration_transferred=0.0, migration_wasted=0.0,
             max_inflight=0.0, stall_ticks=0, aborted_transfers=0,
+            # DEPRECATED (one release): bare names predate the
+            # migration_-prefixed convention; kept in lockstep with the
+            # canonical keys above, removed next release
+            transferred=0.0, wasted=0.0,
         )
 
     # ------------------------------------------------------------ accessors
@@ -443,11 +453,19 @@ class MigrationExecutor:
         requeue: list[int] = []
         for tr in self._active:
             if tr.dest == p or tr.src == p:
+                self.stats["migration_wasted"] += tr.size - tr.remaining
                 self.stats["wasted"] += tr.size - tr.remaining
                 self.stats["aborted_transfers"] += 1
                 self._reserved[tr.dest] -= tr.size
                 self._inflight -= tr.size
                 requeue.append(tr.idx)
+                reg = _obs.registry()
+                if reg.active:
+                    reg.inc("migration_wasted_total", tr.size - tr.remaining)
+                    _obs.tracer().event(
+                        "migration.abort", item=tr.item, dest=tr.dest,
+                        src=tr.src, moved=tr.size - tr.remaining,
+                    )
             else:
                 keep.append(tr)
         self._active = keep
@@ -530,6 +548,7 @@ class MigrationExecutor:
             take = min(tr.remaining, budget)
             tr.remaining -= take
             budget -= take
+            self.stats["migration_transferred"] += take
             self.stats["transferred"] += take
             if tr.remaining <= 1e-12:
                 finished.append(tr)
@@ -541,6 +560,12 @@ class MigrationExecutor:
                 self._inflight -= tr.size
                 self._land(tr.idx, transfer=tr)
             self._dirty = True  # slots and/or space freed
+        reg = _obs.registry()
+        if reg.active:
+            spent = self.plan.bandwidth - budget
+            if spent > 0:
+                reg.inc("migration_transferred_total", spent)
+            reg.set("migration_inflight", self._inflight)
         self.now += 1
 
     def _land(self, idx: int, transfer: _Transfer | None) -> None:
@@ -552,10 +577,20 @@ class MigrationExecutor:
         self._landed[idx] = True
         self._unlanded[v] -= 1
         self.stats["copies_done"] += 1
+        reg = _obs.registry()
+        if reg.active:
+            reg.inc("migration_copies_total")
         if transfer is not None:
             self.events.append(
                 TransferEvent(self.now, "copy", dest, v, transfer.src)
             )
+            tr_ = _obs.tracer()
+            if tr_.active:
+                tr_.complete(
+                    "migration.transfer", transfer.t0, time.perf_counter(),
+                    item=v, dest=dest, src=transfer.src, size=transfer.size,
+                    ticks=self.now - transfer.tick0,
+                )
         if self._unlanded[v] == 0:
             self._ready_drops.extend(self._drops_of.get(v, ()))
             self._run_ready_drops()
@@ -582,6 +617,7 @@ class MigrationExecutor:
             self._base_load[p] -= float(self._w[v])
             self._drop_done[j] = True
             self.stats["drops_done"] += 1
+            _obs.registry().inc("migration_drops_total")
             self.events.append(TransferEvent(self.now, "drop", p, v))
         self._ready_drops = deferred
         self._dirty = True  # drops freed space: retry blocked starts
@@ -624,7 +660,12 @@ class MigrationExecutor:
             if src < 0:
                 still.append(idx)
                 continue
-            self._active.append(_Transfer(idx, dest, v, src, wv))
+            tr_ = _obs.tracer()
+            self._active.append(_Transfer(
+                idx, dest, v, src, wv,
+                t0=time.perf_counter() if tr_.active else 0.0,
+                tick0=self.now,
+            ))
             self._reserved[dest] += wv
             self._inflight += wv
             active_per_dest[dest] += 1
@@ -632,6 +673,9 @@ class MigrationExecutor:
         self._pending = still
         if self._inflight > self.stats["max_inflight"]:
             self.stats["max_inflight"] = self._inflight
+        reg = _obs.registry()
+        if reg.active:
+            reg.set("migration_inflight", self._inflight)
         return started
 
     def _pick_source(self, v: int) -> int:

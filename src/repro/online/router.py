@@ -38,10 +38,12 @@ unit as ``SimulationResult.access_load``) and is updated once per microbatch.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
 from .. import flags as _flags
+from .. import obs as _obs
 from ..core.setcover import Placement, batched_cover_csr, queries_to_csr
 
 __all__ = ["RoutedBatch", "ReplicaRouter", "queries_to_csr"]
@@ -174,6 +176,11 @@ class ReplicaRouter:
             raise ValueError("swap_plan cannot change the partition count")
         self.member = member
         self.stats["plan_swaps"] += 1
+        reg = _obs.registry()
+        if reg.active:
+            reg.inc("router_plan_swaps_total")
+            _obs.tracer().event("router.swap_plan",
+                                swaps=self.stats["plan_swaps"])
 
     # ---------------------------------------------------------------- route
     def route_one(self, query):
@@ -237,6 +244,8 @@ class ReplicaRouter:
         return self._perm
 
     def _route_microbatch(self, ptr, nodes, balance: bool) -> RoutedBatch:
+        reg = _obs.registry()
+        t0 = time.perf_counter() if reg.active else 0.0
         if balance:
             # rows ascending by (ledger load, id): the engine's lowest-row-id
             # tie-break becomes "least-loaded maximal-gain partition"
@@ -258,6 +267,18 @@ class ReplicaRouter:
             )
         self.stats["served_queries"] += len(ptr) - 1
         self.stats["microbatches"] += 1
+        if reg.active:
+            t1 = time.perf_counter()
+            reg.observe("router_microbatch_seconds", t1 - t0)
+            reg.inc("router_served_queries_total", len(ptr) - 1)
+            reg.inc("router_microbatches_total")
+            # live reference: copied out lazily at snapshot time
+            reg.gauge_vector("router_partition_load").set(self.load)
+            tr = _obs.tracer()
+            if tr.active:
+                tr.complete("serve.microbatch", t0, t1,
+                            queries=len(ptr) - 1,
+                            span_sum=int(cov.spans.sum()))
         return RoutedBatch(cov.spans, cov.cover_ptr, cover_parts, pin_parts,
                            ptr, nodes)
 

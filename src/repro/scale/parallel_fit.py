@@ -32,11 +32,11 @@ non-destructive — existing replicas never move, matching
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
 from .. import flags as _flags
+from .. import obs as _obs
 from ..core.algorithms import ALGORITHMS, lmbr
 from ..core.cluster import normalize_capacity
 from ..core.hypergraph import Hypergraph
@@ -138,50 +138,51 @@ def fit_sharded_placement(
     if boundary_repair is None:
         boundary_repair = int(_flags.FLAGS.get("scale_boundary_repair", 256))
 
-    t0 = time.perf_counter()
-    sharding = shard_workload(hg, num_partitions, capacity, num_shards,
-                              seed=seed)
-    t_shard = time.perf_counter() - t0
+    with _obs.timed("scale.shard", shards=num_shards) as _t:
+        sharding = shard_workload(hg, num_partitions, capacity, num_shards,
+                                  seed=seed)
+    t_shard = _t.seconds
 
-    t0 = time.perf_counter()
-    payloads = _shard_payloads(sharding, algorithm, seed, nruns, algo_kwargs)
-    results, used_pool = _run_fits(payloads, workers)
-    t_fit = time.perf_counter() - t0
+    with _obs.timed("scale.fit", workers=workers) as _t:
+        payloads = _shard_payloads(sharding, algorithm, seed, nruns,
+                                   algo_kwargs)
+        results, used_pool = _run_fits(payloads, workers)
+    t_fit = _t.seconds
 
     # ------------------------------------------------------------- merge
-    t0 = time.perf_counter()
-    member = np.zeros((num_partitions, hg.num_nodes), dtype=bool)
-    shard_moves = 0
-    for s, out in enumerate(results):
-        if out is None:
-            continue
-        sub_member, sub_stats = out
-        lo = int(sharding.part_offset[s])
-        rows = np.arange(sub_member.shape[0]) + lo
-        member[np.ix_(rows, sharding.shards[s].items)] = sub_member
-        if sub_stats:
-            shard_moves += int(sub_stats.get("moves", 0))
-    merged = Placement(member, capacity, hg.node_weights)
-    # capacity reconciliation: re-derive loads from the merged matrix and
-    # enforce the global budget (raises on any overflowing row)
-    merged.validate()
-    t_merge = time.perf_counter() - t0
+    with _obs.timed("scale.merge") as _t:
+        member = np.zeros((num_partitions, hg.num_nodes), dtype=bool)
+        shard_moves = 0
+        for s, out in enumerate(results):
+            if out is None:
+                continue
+            sub_member, sub_stats = out
+            lo = int(sharding.part_offset[s])
+            rows = np.arange(sub_member.shape[0]) + lo
+            member[np.ix_(rows, sharding.shards[s].items)] = sub_member
+            if sub_stats:
+                shard_moves += int(sub_stats.get("moves", 0))
+        merged = Placement(member, capacity, hg.node_weights)
+        # capacity reconciliation: re-derive loads from the merged matrix
+        # and enforce the global budget (raises on any overflowing row)
+        merged.validate()
+    t_merge = _t.seconds
 
     # -------------------------------------------------- boundary repair
-    t0 = time.perf_counter()
-    repair_moves = 0
-    if boundary_repair > 0 and len(sharding.boundary_edges):
-        bhg = hg.subhypergraph_edges(sharding.boundary_edges)
-        repaired = lmbr(
-            bhg, num_partitions, capacity, seed=seed,
-            initial=merged, max_moves=int(boundary_repair),
-        )
-        repaired.validate()
-        repair_moves = int((repaired.stats or {}).get("moves", 0))
-        merged = Placement(
-            repaired.member, capacity, hg.node_weights
-        )
-    t_repair = time.perf_counter() - t0
+    with _obs.timed("scale.repair") as _t:
+        repair_moves = 0
+        if boundary_repair > 0 and len(sharding.boundary_edges):
+            bhg = hg.subhypergraph_edges(sharding.boundary_edges)
+            repaired = lmbr(
+                bhg, num_partitions, capacity, seed=seed,
+                initial=merged, max_moves=int(boundary_repair),
+            )
+            repaired.validate()
+            repair_moves = int((repaired.stats or {}).get("moves", 0))
+            merged = Placement(
+                repaired.member, capacity, hg.node_weights
+            )
+    t_repair = _t.seconds
 
     merged.stats = dict(
         shards=sharding.num_shards,

@@ -1,0 +1,305 @@
+"""Tests for the observability layer (repro.obs): metrics registry,
+structured tracer, level selection, hot-path instrumentation, and the
+"observation changes nothing" contract."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import flags, obs
+from repro.core import (
+    ALGORITHMS,
+    Hypergraph,
+    PlacementService,
+    Simulator,
+    random_workload,
+)
+from repro.obs import (
+    NULL_REGISTRY,
+    NULL_TRACER,
+    Registry,
+    Tracer,
+    parse_prom_text,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    flags.reset()
+    obs.reset()
+    yield
+    flags.reset()
+    obs.reset()
+
+
+# ---------------------------------------------------------------- registry
+def test_counter_and_labels():
+    reg = Registry()
+    reg.inc("queries_total")
+    reg.inc("queries_total", 4.0)
+    reg.inc("queries_total", backend="device")
+    snap = reg.snapshot()
+    assert snap["queries_total"] == 5.0
+    assert snap['queries_total{backend="device"}'] == 1.0
+
+
+def test_gauge_set_and_add():
+    reg = Registry()
+    reg.set("inflight", 3.0)
+    reg.gauge("inflight").add(-1.0)
+    assert reg.snapshot()["inflight"] == 2.0
+
+
+def test_gauge_vector_live_reference_copied_at_snapshot():
+    reg = Registry()
+    load = np.zeros(3)
+    reg.gauge_vector("part_load").set(load)
+    load[1] = 7.0  # mutate AFTER set: snapshot must see the live value
+    snap = reg.snapshot()
+    assert snap['part_load{index="1"}'] == 7.0
+    assert snap['part_load{index="0"}'] == 0.0
+
+
+def test_histogram_cumulative_buckets():
+    reg = Registry()
+    h = reg.histogram("lat", buckets=(0.001, 0.01, 0.1))
+    for x in (0.0005, 0.005, 0.005, 0.05, 5.0):
+        h.observe(x)
+    snap = reg.snapshot()
+    assert snap['lat_bucket{le="0.001"}'] == 1.0
+    assert snap['lat_bucket{le="0.01"}'] == 3.0
+    assert snap['lat_bucket{le="0.1"}'] == 4.0
+    assert snap['lat_bucket{le="+Inf"}'] == 5.0
+    assert snap["lat_count"] == 5.0
+    assert snap["lat_sum"] == pytest.approx(5.0605)
+
+
+def test_kind_conflict_rejected():
+    reg = Registry()
+    reg.inc("x")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x")
+
+
+def test_prom_text_round_trip_exact():
+    reg = Registry()
+    reg.inc("a_total", 3.5)
+    reg.inc("a_total", 1.0, shape="B64.N128")
+    reg.set("g", -0.125)
+    reg.gauge_vector("vec").set([1.0, 2.0])
+    reg.observe("h", 0.0123)
+    reg.observe("h", 7.7)
+    snap = reg.snapshot()
+    assert parse_prom_text(reg.to_prom_text()) == snap
+    # TYPE lines present once per metric family
+    text = reg.to_prom_text()
+    assert text.count("# TYPE a_total counter") == 1
+    assert "# TYPE h histogram" in text
+
+
+def test_null_registry_is_inert():
+    assert NULL_REGISTRY.active is False
+    NULL_REGISTRY.inc("x", 5.0)
+    NULL_REGISTRY.observe("y", 1.0)
+    NULL_REGISTRY.gauge_vector("z").set([1.0])
+    assert NULL_REGISTRY.snapshot() == {}
+    assert NULL_REGISTRY.to_prom_text() == ""
+
+
+# ------------------------------------------------------------------ tracer
+def test_span_nesting_by_containment():
+    tr = Tracer()
+    with tr.span("outer", k=1):
+        with tr.span("inner"):
+            pass
+    inner, outer = tr.events  # inner exits (and records) first
+    assert inner["name"] == "inner" and outer["name"] == "outer"
+    assert outer["ph"] == "X" and inner["ph"] == "X"
+    assert outer["ts"] <= inner["ts"]
+    assert outer["ts"] + outer["dur"] >= inner["ts"] + inner["dur"]
+    assert outer["args"] == {"k": 1}
+
+
+def test_instant_and_counter_events():
+    tr = Tracer()
+    tr.event("drift.fire", ratio=1.3)
+    tr.counter("online", served=10, inflight=2)
+    kinds = [e["ph"] for e in tr.events]
+    assert kinds == ["i", "C"]
+    assert tr.events[0]["s"] == "t"
+    assert tr.events[1]["args"] == {"served": 10, "inflight": 2}
+
+
+def test_chrome_trace_and_jsonl_serialise():
+    tr = Tracer()
+    with tr.span("a"):
+        pass
+    tr.event("b")
+    doc = json.loads(tr.to_chrome_trace())
+    assert doc["displayTimeUnit"] == "ms"
+    assert [e["name"] for e in doc["traceEvents"]] == ["a", "b"]
+    lines = tr.to_jsonl().splitlines()
+    assert len(lines) == 2
+    assert json.loads(lines[0])["name"] == "a"
+
+
+def test_spans_filter_and_clear():
+    tr = Tracer()
+    with tr.span("x"):
+        pass
+    tr.event("x")
+    assert len(tr.spans("x")) == 1
+    assert len(tr.spans()) == 1
+    tr.clear()
+    assert tr.events == [] and tr.spans() == []
+
+
+def test_null_tracer_is_inert():
+    assert NULL_TRACER.active is False
+    with NULL_TRACER.span("x"):
+        pass
+    NULL_TRACER.event("y")
+    assert NULL_TRACER.events == ()
+    assert json.loads(NULL_TRACER.to_chrome_trace()) == {"traceEvents": []}
+
+
+# --------------------------------------------------- level selection / flags
+def test_level_selection():
+    assert obs.registry() is NULL_REGISTRY
+    assert obs.tracer() is NULL_TRACER
+    flags.FLAGS["obs_level"] = "counters"
+    assert obs.registry().active and obs.tracer() is NULL_TRACER
+    flags.FLAGS["obs_level"] = "trace"
+    assert obs.registry().active and obs.tracer().active
+
+
+def test_obs_flag_variants():
+    flags.set_variant("obstrace")
+    assert flags.FLAGS["obs_level"] == "trace"
+    flags.set_variant("obscounters")
+    assert flags.FLAGS["obs_level"] == "counters"
+    flags.set_variant("obsoff")
+    assert flags.FLAGS["obs_level"] == "off"
+    flags.set_variant("obssnap100")
+    assert flags.FLAGS["obs_snapshot_every"] == 100
+    with pytest.raises(ValueError):
+        flags.set_variant("obsbogus")
+    with pytest.raises(ValueError):
+        flags.set_variant("obssnap-5")
+
+
+def test_timed_always_measures_trace_only_when_tracing():
+    with obs.timed("work") as t:
+        sum(range(1000))
+    assert t.seconds > 0.0
+    assert obs.tracer().spans() == []  # off: no event recorded
+    flags.FLAGS["obs_level"] = "trace"
+    with obs.timed("work", stage="x") as t:
+        pass
+    spans = obs.tracer().spans("work")
+    assert len(spans) == 1 and spans[0]["args"] == {"stage": "x"}
+    assert t.seconds >= 0.0
+
+
+# --------------------------------------------- observation changes nothing
+def _summary_no_wall_clock(res):
+    return {k: v for k, v in res.summary().items() if k != "placement_s"}
+
+
+def test_off_vs_trace_bit_identical_fit_and_serve():
+    wl = random_workload(num_items=120, num_queries=300, density=5, seed=4)
+    sim = Simulator(8, 32)
+
+    base = sim.run_online(wl.hypergraph, ALGORITHMS["lmbr"], name="lmbr",
+                          seed=0, max_moves=40)
+    flags.FLAGS["obs_level"] = "trace"
+    obs.reset()
+    traced = sim.run_online(wl.hypergraph, ALGORITHMS["lmbr"], name="lmbr",
+                            seed=0, max_moves=40)
+    assert np.array_equal(base.spans, traced.spans)
+    assert np.array_equal(base.access_load, traced.access_load)
+    assert _summary_no_wall_clock(base) == _summary_no_wall_clock(traced)
+    # and the traced run actually produced spans
+    assert obs.tracer().spans("fit.lmbr")
+    assert obs.tracer().spans("serve.microbatch")
+
+
+# ------------------------------------------- end-to-end acceptance trace
+def test_full_lifecycle_trace_and_prom_round_trip():
+    """fit -> serve -> outage -> drift refit -> paced migration, traced:
+    the Chrome trace must cover fit phases, router microbatches, the drift
+    refit, and EVERY migration transfer; the registry must round-trip
+    through the Prometheus text format."""
+    old = random_workload(num_items=120, num_queries=500, density=6, seed=2)
+    new = random_workload(num_items=120, num_queries=500, density=6, seed=9)
+    trace = Hypergraph.from_edges(
+        [old.hypergraph.edge(e) for e in range(200)]
+        + [new.hypergraph.edge(e) for e in range(500)],
+        num_nodes=120,
+    )
+    target = ALGORITHMS["lmbr"](old.hypergraph, 10, 30, seed=1, max_moves=40)
+    flags.set_variant("driftw128+driftth1.1+routermb64+obstrace+obssnap100")
+    flags.FLAGS["migration_bandwidth"] = 5.0
+    obs.reset()
+    sim = Simulator(10, 30)
+    res = sim.run_online(
+        old.hypergraph, ALGORITHMS["hpa"], name="hpa+drift", trace=trace,
+        events=[(20, "down", 3), (60, "up", 3), (100, "migrate", target)],
+        service=PlacementService("lmbr", seed=0), refit_moves=128, seed=0,
+    )
+    s = res.summary()
+    tr = obs.tracer()
+
+    # fit phases: hpa coarsen/refine under the top-level fit span
+    assert tr.spans("fit.place") and tr.spans("fit.hpa")
+    assert tr.spans("fit.hpa.coarsen") and tr.spans("fit.hpa.refine")
+    # serving: one complete event per routed microbatch
+    assert len(tr.spans("serve.microbatch")) > 0
+    # drift fired and the refit was traced
+    assert s["drift_fires"] >= 1
+    assert tr.spans("drift.refit") and tr.spans("fit.lmbr")
+    # failover events
+    names = [e["name"] for e in tr.events]
+    assert "failover.down" in names and "failover.up" in names
+    # every migration transfer landed as a complete event
+    assert s["migrations"] >= 1
+    assert len(tr.spans("migration.transfer")) == s["migration_copies"]
+    # periodic snapshots emitted as counter events
+    snaps = [e for e in tr.events
+             if e["ph"] == "C" and e["name"] == "online.snapshot"]
+    assert len(snaps) >= 1
+    assert s["served_queries"] >= 100  # snapshots had a chance to fire
+
+    # the whole thing is valid Chrome trace JSON
+    doc = json.loads(tr.to_chrome_trace())
+    assert {e["name"] for e in doc["traceEvents"]} >= {
+        "fit.hpa", "serve.microbatch", "migration.transfer"}
+
+    # registry round-trips through the text exposition exactly
+    reg = obs.registry()
+    snap = reg.snapshot()
+    assert snap["migration_copies_total"] == s["migration_copies"]
+    assert snap["router_plan_swaps_total"] == s["plan_swaps"]
+    assert parse_prom_text(reg.to_prom_text()) == snap
+
+
+def test_migration_stats_canonical_and_deprecated_aliases():
+    """Executor stats carry migration_transferred/migration_wasted plus the
+    deprecated bare keys, in lockstep."""
+    from repro.online.migration import MigrationExecutor, plan_migration
+
+    from repro.core.setcover import Placement
+
+    wl = random_workload(num_items=80, num_queries=200, density=5, seed=1)
+    src = ALGORITHMS["hpa"](wl.hypergraph, 8, 24, seed=0)
+    dst = ALGORITHMS["lmbr"](wl.hypergraph, 8, 24, seed=0, max_moves=30)
+    plan = plan_migration(src.member, dst.member,
+                          wl.hypergraph.node_weights, bandwidth=4.0)
+    live = Placement(src.member.copy(), 24, wl.hypergraph.node_weights)
+    ex = MigrationExecutor(plan, live)
+    while not ex.done:
+        ex.advance(1)
+    assert ex.stats["migration_transferred"] == ex.stats["transferred"]
+    assert ex.stats["migration_wasted"] == ex.stats["wasted"]
+    assert ex.stats["migration_transferred"] > 0.0

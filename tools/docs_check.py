@@ -35,7 +35,7 @@ from repro import flags  # noqa: E402
 
 FLAG_PREFIXES = ("span_", "lmbr_", "mla_", "moe_", "accum_", "sp_",
                  "router_", "drift_", "scale_", "placement_", "durability_",
-                 "node_", "migration_")
+                 "node_", "migration_", "obs_")
 # flag-prefixed identifiers that are NOT flags (kernel / bench row names,
 # serving counters, profile columns, API parameters)
 NON_FLAGS = {"span_gain", "span_gain_calibration", "span_gain_ref",
@@ -46,7 +46,15 @@ NON_FLAGS = {"span_gain", "span_gain_calibration", "span_gain_ref",
              "span_regret",
              "migration_copies", "migration_drops", "migration_ticks",
              "migration_done", "migration_transfer_gb",
-             "migration_wasted_gb", "migration_max_inflight_gb"}
+             "migration_wasted_gb", "migration_max_inflight_gb",
+             # metric / trace-event series names (repro.obs), not flags
+             "router_microbatch_seconds", "router_partition_load",
+             "router_plan_swaps_total", "router_served_queries_total",
+             "router_microbatches_total", "migration_transferred",
+             "migration_wasted", "migration_inflight",
+             "migration_transferred_total", "migration_wasted_total",
+             "migration_copies_total", "migration_drops_total",
+             "drift_fires_total", "drift_refits_total", "lmbr_moves"}
 # backticked tokens that should parse as --variant specs
 VARIANT_RE = re.compile(
     r"^(baseline|mla_decomp|sp2?|accum\d+|cf[\d.]+|spanth\d+|peelth\d+|"
@@ -57,6 +65,7 @@ VARIANT_RE = re.compile(
     r"routerbal[01]|routermb\d+|routereps[\d.]+|"
     r"driftw\d+|driftth[\d.]+|shards\d+|scalew\d+|brepair\d+|"
     r"migbw[\d.]+|migconc\d+|mighead[\d.]+|"
+    r"obs(off|counters|trace)|obssnap\d+|"
     r"energy|durab[\d.e+-]+|nodecost[\d.]+|routercost[01])"
     r"(\+.+)?$"
 )
