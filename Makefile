@@ -12,9 +12,11 @@ test:
 ci: test-fast bench-smoke docs-check
 
 # README/ARCHITECTURE/benchmarks docs: snippets run, commands and flag
-# names exist (tools/docs_check.py)
+# names exist (tools/docs_check.py); the obs_report CLI renders the
+# committed tiny fixture so the report path can't rot
 docs-check:
 	$(PY) tools/docs_check.py
+	$(PY) tools/obs_report.py tools/fixtures/tiny_trace.jsonl --prom tools/fixtures/tiny_prom.txt > /dev/null
 
 # skip the slow end-to-end train/distribution tests
 test-fast:

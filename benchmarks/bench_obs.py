@@ -23,6 +23,19 @@ Three sections, one BENCH_obs.json:
   * roundtrip — after the counters pass, ``parse_prom_text(to_prom_text())``
     must equal ``snapshot()`` exactly; after the trace pass, the Chrome
     trace JSON must parse and contain the serve.microbatch spans.
+  * health — the PR 10 monitoring gates, on a ``run_online`` replay with a
+    deterministic three-partition kill and a later repair:
+      - ``storm``: the degraded-rate AND load-skew alerts must FIRE within
+        one health window (``health_window`` snapshots) of the kill and
+        RESOLVE after the repair,
+      - ``clean``: the identical monitored replay without faults must fire
+        ZERO alerts,
+      - the storm replay's serving results (spans, access load) must stay
+        bit-identical to the same replay with observability off —
+        monitoring observes, it never steers.
+    The counters-mode hot-path overhead of the monitoring release stays
+    under the same ``COUNTERS_GATE`` as before (health work happens at
+    snapshot cadence, not per microbatch).
 
 Emits benchmarks/results/BENCH_obs.json; see benchmarks/README.md for the
 row schema.
@@ -218,6 +231,67 @@ def run(quick: bool = True) -> list[dict]:
         raise AssertionError("trace mode produced no serve.microbatch spans")
     rows.append(dict(section="roundtrip", level="trace",
                      events=len(doc["traceEvents"]), identical=True))
+
+    # ----------------------------------------------------------- health
+    from repro.core import Simulator, random_workload
+    from repro.obs import HealthMonitor
+
+    hwl = random_workload(num_items=120, num_queries=4000, density=6, seed=2)
+    kill_at, heal_at = 1000, 2500
+    storm = [(kill_at, "down", 3), (kill_at, "down", 5),
+             (kill_at, "down", 7), (heal_at, "repair", 1),
+             (heal_at + 1, "up", 3), (heal_at + 1, "up", 5),
+             (heal_at + 1, "up", 7)]
+    snap_every, hw = 100, 4
+    variant = (f"routermb64+obscounters+obssnap{snap_every}+obshealth1"
+               f"+healthw{hw}+healthskew3.0")
+
+    def _health_run(events, monitored: bool):
+        flags.set_variant(variant if monitored else "routermb64")
+        obs.reset()
+        mon = HealthMonitor.from_flags() if monitored else None
+        res = Simulator(10, 30).run_online(
+            hwl.hypergraph, ALGORITHMS["hpa"], seed=0, events=list(events),
+            auto_repair=False, health=mon,
+        )
+        return res, mon
+
+    res_off, _ = _health_run(storm, monitored=False)
+    res_storm, mon_storm = _health_run(storm, monitored=True)
+    if not (np.array_equal(res_off.spans, res_storm.spans)
+            and np.array_equal(res_off.access_load, res_storm.access_load)):
+        raise AssertionError("health monitoring changed serving results")
+
+    # snapshot index of the kill vs of each fire: both alerts must fire
+    # within one health window (hw snapshots) of the kill, and resolve
+    snap_t = mon_storm.store.series("online_served_queries").times()
+    fires = {h["alert"]: h["t"] for h in mon_storm.history
+             if h["kind"] == "fire"}
+    kill_idx = int((snap_t < kill_at).sum())
+    worst_lag = 0
+    for rule in ("degraded_rate", "load_skew"):
+        if rule not in fires:
+            raise AssertionError(f"{rule} did not fire under the storm")
+        lag = int((snap_t <= fires[rule]).sum()) - kill_idx
+        worst_lag = max(worst_lag, lag)
+        if lag > hw:
+            raise AssertionError(
+                f"{rule} fired {lag} snapshots after the kill "
+                f"> {hw} (one health window)"
+            )
+        if mon_storm.alerts[rule].state != "ok":
+            raise AssertionError(f"{rule} never resolved after the repair")
+    rows.append(dict(section="health", level="storm", identical=True,
+                     events=len(mon_storm.history), ratio=worst_lag,
+                     gate=hw, series=len(snap_t)))
+
+    _, mon_clean = _health_run([], monitored=True)
+    if mon_clean.history:
+        raise AssertionError(
+            f"clean run fired alerts: {mon_clean.history}"
+        )
+    rows.append(dict(section="health", level="clean", identical=True,
+                     events=0, series=mon_clean.stats["checks"]))
 
     flags.reset()
     obs.reset()

@@ -238,6 +238,8 @@ class Simulator:
         repair_k: int = 1,
         auto_repair: bool = True,
         validate: bool = True,
+        health=None,
+        on_alert=None,
         **algo_kwargs,
     ) -> SimulationResult:
         """Event-capable online replay: fit once, then SERVE the trace
@@ -279,7 +281,18 @@ class Simulator:
         continues while partitions are dead.  The returned result's
         ``spans`` cover the served queries only, and ``summary()`` carries
         the serving counters (served_queries, plan_swaps, repaired_items,
-        degraded_queries, ...)."""
+        degraded_queries, ...).
+
+        Health monitoring (``flags.FLAGS["obs_health"]`` or an explicit
+        ``health=HealthMonitor``): every periodic snapshot
+        (``obs_snapshot_every``, required > 0 along with
+        ``obs_level != "off"``) is fed to the monitor, whose SLO rules
+        (windowed avg span vs the fit-time baseline, degraded rate, load
+        skew, p99 microbatch latency, migration backlog) drive the
+        firing/resolved alert machine — surfaced via ``on_alert``,
+        tracer ``alert.*`` events, and
+        ``online_stats["alerts_fired"/"alerts_resolved"]``.  Monitoring
+        is read-only: it never changes placement, routing, or stats."""
         from .. import flags as _flags
         from ..online import DriftDetector, FailoverManager, ReplicaRouter
         from ..online.migration import (
@@ -307,6 +320,16 @@ class Simulator:
                        if self.profile is not None else None),
         )
         failover = FailoverManager(live, profile=self.profile)
+
+        _fit_base: list = []  # lazy cache: detector AND health share it
+
+        def _fit_baseline() -> float:
+            if not _fit_base:
+                _fit_base.append(float(batched_spans_csr(
+                    hg.edge_ptr, hg.edge_nodes, pl.member
+                ).mean()) if hg.num_edges else 0.0)
+            return _fit_base[0]
+
         detector = None
         if service is not None:
             detector = DriftDetector(
@@ -314,9 +337,7 @@ class Simulator:
                               algo_name),
                 service, refit_moves=refit_moves,
             )
-            detector.set_baseline(float(batched_spans_csr(
-                hg.edge_ptr, hg.edge_nodes, pl.member
-            ).mean()) if hg.num_edges else 0.0)
+            detector.set_baseline(_fit_baseline())
 
         migrator: MigrationExecutor | None = None
         migration_ticks = 0
@@ -442,6 +463,7 @@ class Simulator:
         mb = max(1, int(_flags.FLAGS.get("router_microbatch", 384)))
         pos = 0
         degraded = 0
+        span_total = 0
         spans_parts: list[np.ndarray] = []
         total_energy = 0.0
         total_shipped = 0.0
@@ -452,10 +474,31 @@ class Simulator:
         _reg = _obs.registry()
         next_snap = snap_every if (snap_every > 0 and _reg.active) else 0
 
+        # health monitoring rides on the periodic snapshots: flags-armed
+        # construction here, or a caller-supplied monitor (inspectable
+        # after the run).  Read-only by contract — evaluation happens
+        # between microbatches and changes no serving state.
+        if health is None and bool(_flags.FLAGS.get("obs_health", False)):
+            from ..obs.health import HealthMonitor
+
+            health = HealthMonitor.from_flags(on_alert=on_alert)
+        if health is not None:
+            if on_alert is not None and health.on_alert is None:
+                health.on_alert = on_alert
+            if not _reg.active or snap_every <= 0:
+                raise ValueError(
+                    "health monitoring needs obs_level != 'off' and "
+                    "obs_snapshot_every > 0 (the monitor consumes the "
+                    "periodic registry snapshots)"
+                )
+            if health.baseline_span is None:
+                health.set_baseline(_fit_baseline())
+
         def _emit_snapshot() -> None:
             served = int(router.stats["served_queries"])
             _reg.set("online_served_queries", served)
             _reg.set("online_degraded_queries", degraded)
+            _reg.set("online_span_sum", float(span_total))
             _reg.gauge_vector("online_partition_load").set(router.load.copy())
             inflight = (migrator.inflight_bytes if migrator is not None
                         else 0.0)
@@ -468,6 +511,10 @@ class Simulator:
                     windowed_avg_span=(detector.windowed_avg_span
                                        if detector is not None else 0.0),
                 )
+            if health is not None:
+                # deterministic time axis: attempted queries, so windows
+                # and rates are reproducible run-to-run
+                health.observe(_reg.snapshot(), t=float(served + degraded))
 
         while pos < nq:
             while ev_i < len(ev) and ev[ev_i][0] <= pos:
@@ -490,6 +537,8 @@ class Simulator:
                 ptr, nodes = sptr, nodes[sidx]
             batch = router.route_csr(ptr, nodes)
             spans_parts.append(batch.spans)
+            if next_snap:  # running span sum only feeds snapshot gauges
+                span_total += int(batch.spans.sum())
             scanned, shipped = _traffic_gb(
                 batch.edge_ptr, batch.edge_nodes, batch.spans,
                 batch.cover_ptr, batch.cover_parts, batch.pin_parts,
@@ -563,6 +612,11 @@ class Simulator:
                 drift_fires=int(detector.stats["drift_fires"]),
                 refits=int(detector.stats["refits"]),
                 windowed_avg_span=round(detector.windowed_avg_span, 4),
+            )
+        if health is not None:
+            online_stats.update(
+                alerts_fired=int(health.stats["alerts_fired"]),
+                alerts_resolved=int(health.stats["alerts_resolved"]),
             )
         if mig_totals["migrations"]:
             if migrator is not None:  # trace ended mid-migration

@@ -198,6 +198,36 @@ FLAGS = {
     # Chrome-trace counter event when tracing) every N served queries.
     # 0 (default) disables periodic snapshots.
     "obs_snapshot_every": 0,
+    # health monitoring (repro.obs.health): arm the HealthMonitor inside
+    # run_online.  Requires obs_level != "off" AND obs_snapshot_every > 0
+    # (the monitor consumes the periodic snapshots) — run_online raises
+    # ValueError otherwise.  Monitoring is read-only: it changes no
+    # placement, routing, or stats values (same contract as obs_level).
+    "obs_health": False,
+    # health: window size in SNAPSHOTS for every windowed SLO rule (avg
+    # span, degraded rate, load skew, p99 latency, backlog).
+    "health_window": 8,
+    # health: consecutive clear evaluations before a firing alert
+    # resolves (hysteresis; firing happens on the first breach).
+    "health_hysteresis": 2,
+    # health SLO thresholds — 0 disables the individual rule:
+    # windowed avg span / fit-time baseline ratio ceiling,
+    "health_span_slo": 1.5,
+    # p99 serve.microbatch latency ceiling in seconds (from the
+    # router_microbatch_seconds histogram; wall-clock, so 0/off by
+    # default — enable for real deployments, not unit tests),
+    "health_p99_slo": 0.0,
+    # windowed degraded-query rate ceiling (degraded / attempted),
+    "health_degraded_slo": 0.02,
+    # windowed per-partition load-delta skew ceiling (p99 / mean),
+    "health_skew_slo": 4.0,
+    # windowed mean migration in-flight backlog ceiling (item-weight
+    # units; 0/off by default — only meaningful with paced migrations),
+    "health_backlog_slo": 0.0,
+    # health: EWMA z-score anomaly detection threshold on every rule's
+    # value stream (|z| above this fires "<rule>_anomaly" through the
+    # same state machine).  0 (default) disables anomaly rules.
+    "health_anomaly_z": 0.0,
 }
 
 
@@ -303,6 +333,8 @@ def set_variant(spec: str):
             if head < 0:
                 raise ValueError(f"migration_headroom must be >= 0, got {head}")
             FLAGS["migration_headroom"] = head
+        elif part.startswith("obshealth"):
+            FLAGS["obs_health"] = bool(int(part[len("obshealth"):]))
         elif part.startswith("obssnap"):
             every = int(part[len("obssnap"):])
             if every < 0:
@@ -313,6 +345,31 @@ def set_variant(spec: str):
             if lv not in ("off", "counters", "trace"):
                 raise ValueError(f"unknown obs level {lv!r}")
             FLAGS["obs_level"] = lv
+        elif part.startswith("healthw"):
+            w = int(part[len("healthw"):])
+            if w < 2:
+                raise ValueError(f"health_window must be >= 2, got {w}")
+            FLAGS["health_window"] = w
+        elif part.startswith("healthhyst"):
+            h = int(part[len("healthhyst"):])
+            if h < 1:
+                raise ValueError(f"health_hysteresis must be >= 1, got {h}")
+            FLAGS["health_hysteresis"] = h
+        elif part.startswith("healthspan"):
+            FLAGS["health_span_slo"] = float(part[len("healthspan"):])
+        elif part.startswith("healthp99"):
+            FLAGS["health_p99_slo"] = float(part[len("healthp99"):])
+        elif part.startswith("healthdeg"):
+            FLAGS["health_degraded_slo"] = float(part[len("healthdeg"):])
+        elif part.startswith("healthskew"):
+            FLAGS["health_skew_slo"] = float(part[len("healthskew"):])
+        elif part.startswith("healthbacklog"):
+            FLAGS["health_backlog_slo"] = float(part[len("healthbacklog"):])
+        elif part.startswith("healthz"):
+            z = float(part[len("healthz"):])
+            if z < 0:
+                raise ValueError(f"health_anomaly_z must be >= 0, got {z}")
+            FLAGS["health_anomaly_z"] = z
         elif part.startswith("span"):
             backend = part[len("span"):]
             if backend not in ("auto", "numpy", "jax", "pallas"):
@@ -336,4 +393,8 @@ def reset():
                  durability_eps=0.0, node_cost_weight=0.0,
                  router_cost_aware=False, migration_bandwidth=0.0,
                  migration_concurrency=4, migration_headroom=0.10,
-                 obs_level="off", obs_snapshot_every=0)
+                 obs_level="off", obs_snapshot_every=0, obs_health=False,
+                 health_window=8, health_hysteresis=2, health_span_slo=1.5,
+                 health_p99_slo=0.0, health_degraded_slo=0.02,
+                 health_skew_slo=4.0, health_backlog_slo=0.0,
+                 health_anomaly_z=0.0)

@@ -29,10 +29,17 @@ from .. import flags as _flags
 from .registry import (Registry, NullRegistry, NULL_REGISTRY,
                        DEFAULT_BUCKETS, parse_prom_text)
 from .trace import Tracer, NullTracer, NULL_TRACER, NULL_SPAN
+from .timeseries import SeriesRing, TimeSeriesStore
+from .health import SLORule, Alert, HealthMonitor
+from .analyze import (load_events, build_span_tree, aggregate_spans,
+                      critical_path, top_slowest, render_report)
 
 __all__ = [
     "Registry", "NullRegistry", "NULL_REGISTRY", "DEFAULT_BUCKETS",
     "parse_prom_text", "Tracer", "NullTracer", "NULL_TRACER", "NULL_SPAN",
+    "SeriesRing", "TimeSeriesStore", "SLORule", "Alert", "HealthMonitor",
+    "load_events", "build_span_tree", "aggregate_spans", "critical_path",
+    "top_slowest", "render_report",
     "level", "registry", "tracer", "reset", "timed",
 ]
 

@@ -409,10 +409,6 @@ class MigrationExecutor:
             copies_done=0, drops_done=0,
             migration_transferred=0.0, migration_wasted=0.0,
             max_inflight=0.0, stall_ticks=0, aborted_transfers=0,
-            # DEPRECATED (one release): bare names predate the
-            # migration_-prefixed convention; kept in lockstep with the
-            # canonical keys above, removed next release
-            transferred=0.0, wasted=0.0,
         )
 
     # ------------------------------------------------------------ accessors
@@ -454,7 +450,6 @@ class MigrationExecutor:
         for tr in self._active:
             if tr.dest == p or tr.src == p:
                 self.stats["migration_wasted"] += tr.size - tr.remaining
-                self.stats["wasted"] += tr.size - tr.remaining
                 self.stats["aborted_transfers"] += 1
                 self._reserved[tr.dest] -= tr.size
                 self._inflight -= tr.size
@@ -549,7 +544,6 @@ class MigrationExecutor:
             tr.remaining -= take
             budget -= take
             self.stats["migration_transferred"] += take
-            self.stats["transferred"] += take
             if tr.remaining <= 1e-12:
                 finished.append(tr)
         if finished:

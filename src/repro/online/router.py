@@ -123,6 +123,18 @@ class ReplicaRouter:
                           ledger_sorts=0)
         if node_cost is not None:
             self.set_node_cost(node_cost)
+        self._bind_load_gauge()
+
+    def _bind_load_gauge(self) -> None:
+        """(Re)bind the exported per-partition load GaugeVector to THIS
+        router's live ledger.  The gauge holds a live reference (copied
+        out lazily at snapshot time), so it must rebind whenever the
+        ledger's identity could differ from what the registry last saw:
+        at construction (a fresh router must not leave the gauge pointing
+        at a previous router's ledger) and after ``swap_plan``."""
+        reg = _obs.registry()
+        if reg.active:
+            reg.gauge_vector("router_partition_load").set(self.load)
 
     def set_node_cost(self, node_cost) -> None:
         """Install the per-partition serving-cost key the cost-aware
@@ -181,6 +193,7 @@ class ReplicaRouter:
             reg.inc("router_plan_swaps_total")
             _obs.tracer().event("router.swap_plan",
                                 swaps=self.stats["plan_swaps"])
+        self._bind_load_gauge()
 
     # ---------------------------------------------------------------- route
     def route_one(self, query):

@@ -201,7 +201,7 @@ def test_executor_final_bit_identity_and_headroom(plans):
     assert np.array_equal(live.member, pb.member)
     assert ex.stats["copies_done"] == mp.num_copies
     assert ex.stats["drops_done"] == mp.num_drops
-    assert ex.stats["transferred"] == pytest.approx(
+    assert ex.stats["migration_transferred"] == pytest.approx(
         mp.bytes_to_move(pa.node_weights)
     )
 
@@ -326,7 +326,7 @@ def test_mid_migration_destination_failure(plans):
     assert ex.stats["copies_done"] == mp.num_copies
     assert ex.stats["drops_done"] == mp.num_drops
     assert ex.stats["aborted_transfers"] >= 1
-    assert ex.stats["wasted"] >= 0.0
+    assert ex.stats["migration_wasted"] >= 0.0
 
 
 # ------------------------------------------------------- property (shim'd)

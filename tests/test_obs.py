@@ -284,9 +284,10 @@ def test_full_lifecycle_trace_and_prom_round_trip():
     assert parse_prom_text(reg.to_prom_text()) == snap
 
 
-def test_migration_stats_canonical_and_deprecated_aliases():
-    """Executor stats carry migration_transferred/migration_wasted plus the
-    deprecated bare keys, in lockstep."""
+def test_migration_stats_canonical_only():
+    """Executor stats carry ONLY the canonical migration_-prefixed keys;
+    the deprecated bare transferred/wasted aliases (scheduled for removal
+    after one release in PR 9) are gone."""
     from repro.online.migration import MigrationExecutor, plan_migration
 
     from repro.core.setcover import Placement
@@ -300,6 +301,45 @@ def test_migration_stats_canonical_and_deprecated_aliases():
     ex = MigrationExecutor(plan, live)
     while not ex.done:
         ex.advance(1)
-    assert ex.stats["migration_transferred"] == ex.stats["transferred"]
-    assert ex.stats["migration_wasted"] == ex.stats["wasted"]
+    assert "transferred" not in ex.stats
+    assert "wasted" not in ex.stats
     assert ex.stats["migration_transferred"] > 0.0
+    assert ex.stats["migration_wasted"] >= 0.0
+
+
+# ------------------------------------------------- prom exposition edge cases
+def test_prom_label_value_escaping_round_trip():
+    reg = Registry()
+    reg.inc("esc_total", 1.0, path=r"C:\tmp\x")          # backslash
+    reg.inc("esc_total", 2.0, msg='he said "hi"')        # quote
+    reg.inc("esc_total", 3.0, text="line1\nline2")       # newline
+    reg.inc("esc_total", 4.0, q="a b c")                 # spaces
+    text = reg.to_prom_text()
+    assert r'path="C:\\tmp\\x"' in text
+    assert r'msg="he said \"hi\""' in text
+    assert r'text="line1\nline2"' in text
+    assert "\nline2" not in text.replace(r"\n", "")  # stays one line
+    assert parse_prom_text(text) == reg.snapshot()
+
+
+def test_prom_empty_registry_round_trip():
+    reg = Registry()
+    assert reg.snapshot() == {}
+    assert reg.to_prom_text() == ""
+    assert parse_prom_text("") == {}
+    assert parse_prom_text(reg.to_prom_text()) == reg.snapshot()
+
+
+def test_prom_histogram_inf_bucket_and_boundary():
+    reg = Registry()
+    h = reg.histogram("edge_seconds", buckets=(0.1, 1.0))
+    h.observe(0.05)   # first bucket
+    h.observe(0.1)    # boundary: bisect_left counts it IN le="0.1"
+    h.observe(50.0)   # beyond the last bound: +Inf only
+    snap = reg.snapshot()
+    assert snap['edge_seconds_bucket{le="0.1"}'] == 2.0
+    assert snap['edge_seconds_bucket{le="1.0"}'] == 2.0  # cumulative
+    assert snap['edge_seconds_bucket{le="+Inf"}'] == 3.0
+    assert snap["edge_seconds_count"] == 3.0
+    assert snap["edge_seconds_sum"] == 50.15
+    assert parse_prom_text(reg.to_prom_text()) == snap

@@ -40,6 +40,7 @@ ONLINE_KEYS = {
     "partitions_down", "repaired_items", "unrepairable_items",
 }
 DRIFT_KEYS = {"drift_fires", "refits", "windowed_avg_span"}
+HEALTH_KEYS = {"alerts_fired", "alerts_resolved"}
 MIGRATION_KEYS = {
     "migrations", "migration_copies", "migration_drops", "migration_ticks",
     "migration_done", "migration_transfer_gb", "migration_wasted_gb",
@@ -88,6 +89,16 @@ def test_online_drift_migration_summary_exact_keys():
     )
     assert set(res.summary()) == (
         BASE_KEYS | ONLINE_KEYS | DRIFT_KEYS | MIGRATION_KEYS)
+
+
+def test_online_health_summary_exact_keys():
+    """Health monitoring adds exactly the two alert counters (PR 10)."""
+    wl = random_workload(num_items=120, num_queries=300, density=5, seed=4)
+    flags.set_variant("obscounters+obssnap100+obshealth1")
+    res = Simulator(8, 32).run_online(wl.hypergraph, ALGORITHMS["lmbr"],
+                                      name="lmbr", seed=0, max_moves=40)
+    assert set(res.summary()) == (
+        BASE_KEYS | LMBR_FIT_KEYS | ONLINE_KEYS | HEALTH_KEYS)
 
 
 # ------------------------------------------------ BENCH_*.json row schemas

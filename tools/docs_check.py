@@ -35,7 +35,7 @@ from repro import flags  # noqa: E402
 
 FLAG_PREFIXES = ("span_", "lmbr_", "mla_", "moe_", "accum_", "sp_",
                  "router_", "drift_", "scale_", "placement_", "durability_",
-                 "node_", "migration_", "obs_")
+                 "node_", "migration_", "obs_", "health_")
 # flag-prefixed identifiers that are NOT flags (kernel / bench row names,
 # serving counters, profile columns, API parameters)
 NON_FLAGS = {"span_gain", "span_gain_calibration", "span_gain_ref",
@@ -54,7 +54,9 @@ NON_FLAGS = {"span_gain", "span_gain_calibration", "span_gain_ref",
              "migration_wasted", "migration_inflight",
              "migration_transferred_total", "migration_wasted_total",
              "migration_copies_total", "migration_drops_total",
-             "drift_fires_total", "drift_refits_total", "lmbr_moves"}
+             "drift_fires_total", "drift_refits_total", "lmbr_moves",
+             "health_alerts_fired_total", "health_alerts_resolved_total",
+             "health_alerts_active"}
 # backticked tokens that should parse as --variant specs
 VARIANT_RE = re.compile(
     r"^(baseline|mla_decomp|sp2?|accum\d+|cf[\d.]+|spanth\d+|peelth\d+|"
@@ -65,7 +67,9 @@ VARIANT_RE = re.compile(
     r"routerbal[01]|routermb\d+|routereps[\d.]+|"
     r"driftw\d+|driftth[\d.]+|shards\d+|scalew\d+|brepair\d+|"
     r"migbw[\d.]+|migconc\d+|mighead[\d.]+|"
-    r"obs(off|counters|trace)|obssnap\d+|"
+    r"obshealth[01]|obs(off|counters|trace)|obssnap\d+|"
+    r"healthw\d+|healthhyst\d+|healthspan[\d.]+|healthp99[\d.]+|"
+    r"healthdeg[\d.]+|healthskew[\d.]+|healthbacklog[\d.]+|healthz[\d.]+|"
     r"energy|durab[\d.e+-]+|nodecost[\d.]+|routercost[01])"
     r"(\+.+)?$"
 )
